@@ -1,0 +1,50 @@
+"""Fig. 8 — join latency: JSPIM vs CPU-class baselines.
+
+Host timings: the compiled JSPIM probe path vs the sort-merge baseline on
+this machine's single CPU device (functional comparison).  Derived column:
+DDR4 cycle-model speedups at the paper's scales (SF1/10/100) — the paper's
+claim is 400–1000× over the DuckDB-class baseline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.util import row, time_fn
+from repro.core.costmodel import (PIMConfig, Workload,
+                                  cpu_classic_join_seconds,
+                                  cpu_vectorized_join_seconds,
+                                  jspim_join_seconds)
+from repro.engine import build_dim_index, generate_ssb, lookup
+from repro.engine.baselines import sort_merge_join_unique
+
+SSB_PIM = PIMConfig(channels=8, ranks_per_channel=4)
+
+
+def run():
+    rows = []
+    tables = generate_ssb(sf=0.05, seed=0)
+    fact = tables["lineorder"]
+    for dim_name in ("customer", "supplier", "part"):
+        dk = tables[dim_name][
+            {"customer": "custkey", "supplier": "suppkey",
+             "part": "partkey"}[dim_name]]
+        fk = fact[{"customer": "custkey", "supplier": "suppkey",
+                   "part": "partkey"}[dim_name]]
+        idx = build_dim_index(dk)
+        jit_lookup = jax.jit(lambda f: lookup(idx, f))
+        jit_sm = jax.jit(lambda f: sort_merge_join_unique(f, dk))
+        us_j = time_fn(jit_lookup, fk)
+        us_b = time_fn(jit_sm, fk)
+        rows.append(row(f"fig08/host_probe_{dim_name}", us_j,
+                        f"sortmerge_us={us_b:.0f};host_ratio={us_b/us_j:.2f}"))
+    # paper-scale derived speedups (cycle model)
+    for sf, nf, nd in ((1, 6_000_000, 200_000), (10, 60_000_000, 2_000_000),
+                       (100, 600_000_000, 20_000_000)):
+        w = Workload(nf, nd, nf)
+        j = jspim_join_seconds(w, SSB_PIM)
+        v = cpu_vectorized_join_seconds(w)
+        c = cpu_classic_join_seconds(w)
+        rows.append(row(f"fig08/model_SF{sf}", j * 1e6,
+                        f"vs_duckdb={v / j:.0f}x;duckdb_vs_classic={c / v:.1f}x"))
+    return rows

@@ -1,0 +1,245 @@
+"""Remaining paper tables/figures (one function per artifact).
+
+Fig 1  — join share of SSB query time (host measurement).
+Fig 2  — baseline join roofline position (arithmetic intensity).
+Tab 2  — setup latency: JSPIM data construction vs PHJ partition+build.
+Fig 9  — skewed self-join (duplication list path).
+Fig 10 — select where(=) / select distinct.
+Tab 3  — vs PID/SPID over (|R| × Zipf) grid (cycle model).
+Fig 12 — full SSB flight, baseline vs JSPIM-offloaded joins.
+Fig 13 — t_CMP sensitivity sweep.
+Tab 4  — data overhead accounting (§4.2.1) + area constants (§4.2.2).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.util import row, time_fn
+from repro.core import costmodel as cm
+from repro.core.skew import zipf_sample
+from repro.engine import (SSB_QUERIES, SSBEngine, build_dim_index,
+                          generate_ssb, join_pairs)
+from repro.engine.baselines import sort_merge_join_unique
+
+SSB_PIM = cm.PIMConfig(channels=8, ranks_per_channel=4)
+SF = 0.05
+
+
+def _tables():
+    return generate_ssb(sf=SF, seed=0)
+
+
+def fig01_join_fraction():
+    tables = _tables()
+    eng = SSBEngine(tables, mode="baseline")
+    rows = []
+    for q in ("Q1.1", "Q2.1", "Q3.1", "Q4.1"):
+        full = time_fn(lambda: eng.run(q), iters=3)
+        joins = time_fn(lambda: [eng._join(d) for d in
+                                 sorted(set(SSB_QUERIES[q].dim_filters) |
+                                        {d for d, _, _ in
+                                         SSB_QUERIES[q].group_by})], iters=3)
+        rows.append(row(f"fig01/{q}", full,
+                        f"join_frac={min(1.0, joins / full):.2f}"))
+    return rows
+
+
+def fig02_join_roofline():
+    # arithmetic intensity of the probe phase: ~2 flops (hash+cmp) per
+    # 16 bytes touched -> deep in the memory-bound region (paper Fig. 2)
+    w = cm.Workload(600_000_000, 2_000_000, 600_000_000)
+    bytes_moved = (w.n_probes + w.n_build) * 16 * 2.2
+    flops = w.n_probes * 8
+    ai = flops / bytes_moved
+    return [row("fig02/baseline_join", 0.0,
+                f"arith_intensity={ai:.3f}flops_per_byte;memory_bound=True")]
+
+
+def tab02_setup_latency():
+    tables = _tables()
+    rows = []
+    for dim_name, pk in (("customer", "custkey"), ("part", "partkey"),
+                         ("supplier", "suppkey")):
+        dk = tables[dim_name][pk]
+        build = jax.jit(lambda k: build_dim_index(k).table.keys)
+        us_build = time_fn(build, dk, iters=3)
+        # PHJ partition pass = radix sort of both sides
+        fk = tables["lineorder"][pk]
+        part = jax.jit(lambda f: jnp.sort(f & 63))
+        us_part = time_fn(part, fk, iters=3)
+        pop_s = cm.jspim_population_seconds(int(dk.shape[0]), SSB_PIM)
+        rows.append(row(f"tab02/{dim_name}", us_build,
+                        f"phj_partition_us={us_part:.0f};"
+                        f"pim_population_model_us={pop_s * 1e6:.1f}"))
+    return rows
+
+
+def fig09_skewed_selfjoin():
+    # n kept modest so pathological-skew match counts stay within int32
+    # (the paper's SF100 self-joins needed a 12TB spill dir for DuckDB)
+    rows = []
+    n = 20_000
+    for z in (0.0, 1.5, 2.0):
+        col = jnp.asarray(zipf_sample(2_000, n, z, seed=2))
+        idx = build_dim_index(col)
+        cap = 1 << 22
+        j = jax.jit(lambda c: join_pairs(idx, c, capacity=cap).n_matches)
+        us = time_fn(j, col, iters=3)
+        w = cm.Workload(n, n, n * 50, zipf=z)
+        model = cm.jspim_join_seconds(w, SSB_PIM)
+        rows.append(row(f"fig09/zipf{z}", us,
+                        f"model_us={model * 1e6:.1f};"
+                        f"matches={int(j(col))}"))
+    return rows
+
+
+def fig10_select():
+    tables = _tables()
+    col = tables["lineorder"]["custkey"]
+    idx = build_dim_index(tables["customer"]["custkey"])
+    from repro.core import select_distinct, select_where_eq
+    w_eq = jax.jit(lambda k: select_where_eq(idx.table, k, capacity=64).left)
+    us_eq = time_fn(w_eq, jnp.int32(5))
+    us_scan = time_fn(jax.jit(lambda c: (c == 5).sum()), col)
+    us_dist = time_fn(jax.jit(
+        lambda: select_distinct(idx.table, capacity=4096)))
+    us_uni = time_fn(jax.jit(lambda c: jnp.unique(c, size=4096)), col)
+    sel_model = cm.jspim_select_where_seconds()
+    return [
+        row("fig10/select_where_eq", us_eq,
+            f"scan_us={us_scan:.0f};model_ns={sel_model * 1e9:.1f}"),
+        row("fig10/select_distinct", us_dist,
+            f"unique_us={us_uni:.0f};"
+            f"model_us={cm.jspim_select_distinct_seconds(30000) * 1e6:.2f}"),
+    ]
+
+
+def tab03_pim_comparison():
+    rows = []
+    for r_size in (500_000, 8_000_000, 32_000_000):
+        ratios = []
+        ooms = []
+        for z in (0.0, 0.5, 1.5, 2.0):
+            w = cm.Workload(r_size * 4, r_size, r_size * 4, zipf=z)
+            j = cm.jspim_join_seconds(w)
+            p, po = cm.pid_join_seconds(w)
+            s, so = cm.spid_join_seconds(w)
+            ratios.append(s / j)
+            ooms.append((po, so))
+        rows.append(row(f"tab03/R{r_size // 1000}k",
+                        cm.jspim_join_seconds(
+                            cm.Workload(r_size * 4, r_size, r_size * 4)) * 1e6,
+                        f"spid_speedup=[{min(ratios):.0f},{max(ratios):.0f}]x;"
+                        f"pid_oom={[int(a) for a, _ in ooms]};"
+                        f"spid_oom={[int(b) for _, b in ooms]}"))
+    return rows
+
+
+def fig12_ssb_full():
+    tables = _tables()
+    ej = SSBEngine(tables, mode="jspim")
+    eb = SSBEngine(tables, mode="baseline")
+    rows = []
+    tot_j = tot_b = 0.0
+    for q in sorted(SSB_QUERIES):
+        run_j = jax.jit(lambda name=q: ej.run(name)[0])
+        run_b = jax.jit(lambda name=q: eb.run(name)[0])
+        us_j = time_fn(run_j, iters=3)
+        us_b = time_fn(run_b, iters=3)
+        tot_j += us_j
+        tot_b += us_b
+        rows.append(row(f"fig12/{q}", us_j,
+                        f"baseline_us={us_b:.0f};speedup={us_b / us_j:.2f}x"))
+    rows.append(row("fig12/flight", tot_j,
+                    f"baseline_us={tot_b:.0f};"
+                    f"flight_speedup={tot_b / tot_j:.2f}x"))
+    return rows
+
+
+def fig13_tcmp_sensitivity():
+    w = cm.Workload(600_000_000, 2_000_000, 600_000_000)
+    base = cm.jspim_join_seconds(w, SSB_PIM, cm.DDR4Timing(t_cmp=0))
+    rows = []
+    for tc in (0, 1, 2, 4):
+        s = cm.jspim_join_seconds(w, SSB_PIM, cm.DDR4Timing(t_cmp=tc))
+        rows.append(row(f"fig13/tcmp{tc}", s * 1e6,
+                        f"delta={100 * (s / base - 1):.1f}%"))
+    return rows
+
+
+def tab04_overheads():
+    """§4.2.1 accounting with the paper's storage layout: live hash-table
+    entries (key+value per distinct key), the dictionary, the duplication
+    list, and the encoded fact-key column copies — against the dataset at
+    the paper's row widths (lineorder has 17 attributes, ~8B each)."""
+    tables = _tables()
+    n_lo = tables["lineorder"].n_rows
+    dataset = n_lo * 17 * 8 + sum(
+        tables[d].n_rows * len(tables[d].names()) * 8
+        for d in ("customer", "supplier", "part", "date"))
+    over = 0
+    for dim_name, pk in (("customer", "custkey"), ("part", "partkey"),
+                         ("supplier", "suppkey"), ("date", "datekey")):
+        idx = build_dim_index(tables[dim_name][pk])
+        n = tables[dim_name].n_rows
+        over += int(idx.dictionary.n) * 4          # dictionary
+        over += int(idx.table.n_unique) * 8        # live (key, value) pairs
+        over += int((idx.table.group_count > 1).sum()) * 8  # dup-list heads
+    over += 4 * n_lo * 4                           # encoded fact FK copies
+    return [row("tab04/data_overhead", 0.0,
+                f"overhead_frac={over / dataset:.3f};paper=0.07;"
+                f"area_overhead_paper=2.1%")]
+
+
+def run():
+    rows = []
+    for fn in (fig01_join_fraction, fig02_join_roofline, tab02_setup_latency,
+               fig09_skewed_selfjoin, fig10_select, tab03_pim_comparison,
+               fig12_ssb_full, fig13_tcmp_sensitivity, tab04_overheads,
+               sec423_rank_sensitivity, sec323_update_commands):
+        rows.extend(fn())
+    return rows
+
+
+def sec423_rank_sensitivity():
+    """§4.2.3: adding ranks helps, but gains saturate once the shared
+    channel bandwidth (result-return stage) binds — the paper's
+    "sublinear as ranks share bandwidth"."""
+    rows = []
+    w = cm.Workload(600_000_000, 2_000_000, 600_000_000)
+    prev = None
+    for rpc in (1, 2, 4, 8, 16):
+        t = cm.jspim_join_seconds(w, cm.PIMConfig(channels=8,
+                                                  ranks_per_channel=rpc))
+        step = f";step_speedup={prev / t:.2f}x" if prev else ""
+        rows.append(row(f"sec423/ranks_per_chan_{rpc}", t * 1e6,
+                        f"ranks={8 * rpc}{step}"))
+        prev = t
+    return rows
+
+
+def sec323_update_commands():
+    """§3.2.3: entry / index / table update command latencies (host)."""
+    import jax
+    from repro.core import (build_table, entry_update, index_update,
+                            suggest_num_buckets, table_update)
+    keys = jnp.arange(4096, dtype=jnp.int32)
+    t = build_table(keys, jnp.arange(4096),
+                    num_buckets=suggest_num_buckets(4096, 64),
+                    bucket_width=64)
+    e_up = jax.jit(lambda tb: entry_update(tb, jnp.int32(1), jnp.int32(0),
+                                           jnp.int32(9), jnp.int32(2)).keys)
+    i_up = jax.jit(lambda tb: index_update(tb, jnp.int32(7),
+                                           jnp.int32(123)).values)
+    t_up = jax.jit(lambda tb: table_update(
+        tb, jnp.asarray([0]), jnp.zeros((1, t.bucket_width), jnp.int32),
+        jnp.zeros((1, t.bucket_width), jnp.int32)).keys)
+    return [
+        row("sec323/entry_update", time_fn(e_up, t), "one cell write"),
+        row("sec323/index_update", time_fn(i_up, t),
+            "probe + value rewrite (search-assisted)"),
+        row("sec323/table_update", time_fn(t_up, t),
+            "burst bucket-row write (fastest, per paper)"),
+    ]

@@ -1,0 +1,29 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (host timings on this machine's
+single CPU device; ``derived`` columns carry the cycle-model numbers that
+reproduce the paper's tables at full scale).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import fig08_join_speedup, lm_integration, paper_tables
+
+    print("name,us_per_call,derived")
+    bad = 0
+    for mod in (fig08_join_speedup, paper_tables, lm_integration):
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # pragma: no cover
+            bad += 1
+            print(f"{mod.__name__},ERROR,{e!r}", file=sys.stderr)
+    if bad:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,25 @@
+"""Benchmark timing helpers (CPU host timings + cost-model derivations)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw) -> float:
+    """Median wall time per call in microseconds (block_until_ready)."""
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        jax.block_until_ready(r)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str) -> tuple[str, float, str]:
+    return (name, us, derived)

@@ -1,0 +1,7 @@
+"""repro: JSPIM (skew-aware associative lookup) as a production JAX framework.
+
+Layers: core (the paper's technique) -> kernels (Pallas TPU) -> engine
+(columnar DB / SSB) -> models+train+serve (LM framework integration) ->
+launch (multi-pod distribution).
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+"""Architecture & shape registry (10 assigned archs + paper's DB config)."""
+from repro.configs.registry import get_config, list_archs, smoke
+from repro.configs.shapes import SHAPES, input_specs, shape_applicable
+
+__all__ = ["get_config", "list_archs", "smoke", "SHAPES", "input_specs",
+           "shape_applicable"]

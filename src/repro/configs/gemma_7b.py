@@ -1,0 +1,4 @@
+"""Arch config: gemma-7b (see registry.py for the definition)."""
+from repro.configs.registry import GEMMA as CONFIG
+
+__all__ = ["CONFIG"]

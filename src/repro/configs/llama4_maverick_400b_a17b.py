@@ -1,0 +1,4 @@
+"""Arch config: llama4-maverick-400b-a17b (see registry.py for the definition)."""
+from repro.configs.registry import LLAMA4 as CONFIG
+
+__all__ = ["CONFIG"]

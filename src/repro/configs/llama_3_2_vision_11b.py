@@ -1,0 +1,4 @@
+"""Arch config: llama-3.2-vision-11b (see registry.py for the definition)."""
+from repro.configs.registry import LLAMA32_VISION as CONFIG
+
+__all__ = ["CONFIG"]

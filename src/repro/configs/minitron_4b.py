@@ -1,0 +1,4 @@
+"""Arch config: minitron-4b (see registry.py for the definition)."""
+from repro.configs.registry import MINITRON as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Arch config: musicgen-large (see registry.py for the definition)."""
+from repro.configs.registry import MUSICGEN as CONFIG
+
+__all__ = ["CONFIG"]

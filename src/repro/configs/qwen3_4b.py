@@ -1,0 +1,4 @@
+"""Arch config: qwen3-4b (see registry.py for the definition)."""
+from repro.configs.registry import QWEN3_4B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,29 @@
+"""JSPIM core: skew-aware associative lookup (the paper's contribution).
+
+Public surface:
+    build_table / JSPIMTable / probe / probe_deduped / join / select_*
+    Dictionary / build_dictionary / encode / decode
+    coalesce / scatter_back
+    cost models (DDR4/PIM cycle model reproducing the paper's tables)
+"""
+from repro.core.dictionary import (DICT_PAD, NO_CODE, Dictionary,
+                                   build_dictionary, decode, encode)
+from repro.core.dedup import (Coalesced, coalesce, duplication_factor,
+                              scatter_back, windowed_coalesce_mask)
+from repro.core.hash_table import (EMPTY_KEY, HASH_FIBONACCI, HASH_IDENTITY,
+                                   JSPIMTable, build_table, entry_update,
+                                   hash_bucket, index_update,
+                                   suggest_num_buckets, table_update)
+from repro.core.lookup import (JoinResult, ProbeResult, join, probe,
+                               probe_deduped, select_distinct,
+                               select_where_eq)
+
+__all__ = [
+    "DICT_PAD", "NO_CODE", "Dictionary", "build_dictionary", "decode",
+    "encode", "Coalesced", "coalesce", "duplication_factor", "scatter_back",
+    "windowed_coalesce_mask", "EMPTY_KEY", "HASH_FIBONACCI", "HASH_IDENTITY",
+    "JSPIMTable", "build_table", "entry_update", "hash_bucket",
+    "index_update", "suggest_num_buckets", "table_update", "JoinResult",
+    "ProbeResult", "join", "probe", "probe_deduped", "select_distinct",
+    "select_where_eq",
+]

@@ -1,0 +1,71 @@
+"""Probe-stream deduplication — the RLU "coalescing window", generalized.
+
+JSPIM's RLU carries an 8-entry optimization buffer that filters duplicate
+probe keys within a sliding window so a repeated fact key costs one row
+activation instead of N.  On TPU we generalize: a fixed-shape batch ``unique``
+(sort + boundary scan) coalesces *every* duplicate in a probe block, and an
+inverse permutation (the duplication-list analogue) rebuilds the full stream
+after lookup.  A faithful windowed variant is kept for the cost model.
+
+Everything is fixed-shape and jit-able: the number of unique slots is a
+compile-time ``capacity`` and overflow is reported, mirroring the fixed
+geometry of the PIM hash table.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Coalesced(NamedTuple):
+    unique: jax.Array    # (capacity,) unique keys, padded with ``pad``
+    inverse: jax.Array   # (m,) index into ``unique`` rebuilding the stream
+    n_unique: jax.Array  # () int32
+    overflow: jax.Array  # () bool — capacity was insufficient
+
+
+def coalesce(keys: jax.Array, capacity: int, pad: int = -1) -> Coalesced:
+    """Fixed-shape ``unique`` + inverse indices over a 1-D key stream."""
+    keys = keys.astype(jnp.int32)
+    m = keys.shape[0]
+    order = jnp.argsort(keys, stable=True)
+    sk = keys[order]
+    is_first = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    uid = jnp.cumsum(is_first) - 1          # unique rank per sorted element
+    n_unique = is_first.sum().astype(jnp.int32)
+    slot = jnp.where(is_first & (uid < capacity), uid, capacity)
+    unique = jnp.full((capacity,), pad, jnp.int32).at[slot].set(sk, mode="drop")
+    inverse = jnp.zeros((m,), jnp.int32).at[order].set(
+        jnp.minimum(uid, capacity - 1).astype(jnp.int32))
+    return Coalesced(unique, inverse, n_unique, n_unique > capacity)
+
+
+def scatter_back(unique_results: jax.Array, inverse: jax.Array) -> jax.Array:
+    """Rebuild per-probe results from per-unique results (any trailing dims)."""
+    return unique_results[inverse]
+
+
+def windowed_coalesce_mask(keys: jax.Array, window: int = 8) -> jax.Array:
+    """Faithful RLU window model: True where a probe is filtered because an
+    identical key already appeared within the previous ``window - 1`` probes.
+
+    Used by the cost model to count row activations exactly as the paper's
+    8-entry optimization buffer would.
+    """
+    keys = keys.astype(jnp.int32)
+    m = keys.shape[0]
+    hit = jnp.zeros((m,), bool)
+    for d in range(1, window):
+        prev = jnp.concatenate([jnp.full((d,), -1, jnp.int32), keys[:-d]])
+        hit = hit | (prev == keys)
+    return hit
+
+
+def duplication_factor(keys: jax.Array) -> jax.Array:
+    """stream length / distinct keys — the skew statistic the paper exploits."""
+    keys = keys.astype(jnp.int32)
+    sk = jnp.sort(keys)
+    n_unique = 1 + (sk[1:] != sk[:-1]).sum()
+    return keys.shape[0] / n_unique

@@ -1,0 +1,72 @@
+"""Dictionary encoding (JSPIM §3.2.1).
+
+JSPIM stores fixed-size *codes* instead of raw keys inside the PIM module.
+Because the dictionary assigns dense consecutive codes, the downstream
+"simple hash function" (low index bits) spreads codes perfectly uniformly
+across buckets — this is the paper's mechanism for handling hash collisions
+"by modifying the codes" during the encoding phase.
+
+All functions are fixed-shape / jit-able.  The dictionary is a sorted array
+padded with ``DICT_PAD`` so that ``searchsorted`` gives O(log n) encode and a
+single gather gives O(1) decode (the paper: "decoding ... involves just a
+lookup, which benefits from our optimized search engine").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Padding sentinel for unused dictionary slots (sorts after every real key).
+DICT_PAD = jnp.iinfo(jnp.int32).max
+# Code returned for keys that are not present in the dictionary.
+NO_CODE = jnp.int32(-1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Dictionary:
+    """Sorted unique raw keys; the code of a key is its sorted rank."""
+
+    keys: jax.Array  # (capacity,) int32, sorted, padded with DICT_PAD
+    n: jax.Array     # () int32, number of live entries
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+
+def build_dictionary(raw_keys: jax.Array, capacity: int) -> Dictionary:
+    """Build a dictionary from an arbitrary (possibly duplicated) key column.
+
+    ``capacity`` must be >= the number of distinct keys; extra slots are
+    padded.  Returns dense codes 0..n-1 in raw-key sorted order.
+    """
+    raw_keys = raw_keys.astype(jnp.int32)
+    sk = jnp.sort(raw_keys)
+    is_first = jnp.concatenate(
+        [jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    uid = jnp.cumsum(is_first) - 1  # unique rank per sorted element
+    n = is_first.sum().astype(jnp.int32)
+    out = jnp.full((capacity,), DICT_PAD, jnp.int32)
+    slot = jnp.where(is_first & (uid < capacity), uid, capacity)
+    # Drop-out-of-range scatter: slot==capacity falls off the end.
+    out = out.at[slot].set(sk, mode="drop")
+    return Dictionary(keys=out, n=n)
+
+
+def encode(d: Dictionary, raw_keys: jax.Array) -> jax.Array:
+    """raw key -> dense code (or NO_CODE when absent)."""
+    raw_keys = raw_keys.astype(jnp.int32)
+    pos = jnp.searchsorted(d.keys, raw_keys).astype(jnp.int32)
+    pos_c = jnp.minimum(pos, d.capacity - 1)
+    hit = (d.keys[pos_c] == raw_keys) & (pos < d.n)
+    return jnp.where(hit, pos_c, NO_CODE)
+
+
+def decode(d: Dictionary, codes: jax.Array) -> jax.Array:
+    """dense code -> raw key (DICT_PAD for NO_CODE / out-of-range codes)."""
+    codes = codes.astype(jnp.int32)
+    ok = (codes >= 0) & (codes < d.n)
+    return jnp.where(ok, d.keys[jnp.clip(codes, 0, d.capacity - 1)], DICT_PAD)

@@ -1,0 +1,207 @@
+"""JSPIM hash dataset: bucketed unique-key hash table + duplication list.
+
+Faithful to §3.2.1 / Algorithm 1 of the paper:
+
+* The hash table stores **one entry per distinct key**.  Buckets are large
+  (paper: ~100-200 entries; here ``bucket_width`` lanes, default 128) and are
+  addressed by a **simple hash function** — for dictionary-encoded keys the
+  low index bits, which spread dense codes perfectly uniformly (the paper's
+  collision-avoidance-by-encoding).  A whole bucket maps to one "row"
+  (TPU: one VMEM tile row-block; DRAM: one subarray row).
+
+* Each value word carries **one extra tag bit**: 0 → the payload is the
+  dimension-table row index directly; 1 → the payload indexes the
+  **duplication table**, a CSR structure (``dup_offsets``/``dup_indices``)
+  holding the row indices of every replica.  Skewed/duplicated keys therefore
+  never inflate bucket occupancy — probe latency is O(1) regardless of skew.
+
+* ``EMPTY_KEY`` marks unused slots (the paper's null).
+
+The build is a single fixed-shape jit-able function (sorting-based, no
+data-dependent shapes), so it can run sharded under pjit for large dimension
+tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY_KEY = jnp.int32(-0x7FFFFFFF)  # null slot marker
+HASH_IDENTITY = "identity"          # dict-encoded keys: low index bits
+HASH_FIBONACCI = "fibonacci"        # raw keys: multiplicative hash
+_FIB = jnp.uint32(2654435769)       # 2^32 / golden ratio
+
+
+def hash_bucket(keys: jax.Array, num_buckets: int, mode: str) -> jax.Array:
+    """Map keys to bucket ids.  ``num_buckets`` must be a power of two."""
+    mask = num_buckets - 1
+    if mode == HASH_IDENTITY:
+        return (keys & mask).astype(jnp.int32)
+    if mode == HASH_FIBONACCI:
+        h = (keys.astype(jnp.uint32) * _FIB) >> jnp.uint32(17)
+        return (h & jnp.uint32(mask)).astype(jnp.int32)
+    raise ValueError(f"unknown hash mode {mode!r}")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class JSPIMTable:
+    """The PIM-resident hash dataset + CPU-side duplication table."""
+
+    # --- PIM-resident (hash dataset) -------------------------------------
+    keys: jax.Array     # (num_buckets, bucket_width) int32, EMPTY_KEY padded
+    values: jax.Array   # (num_buckets, bucket_width) int32: payload<<1 | dup
+    # --- CPU-resident (duplication linked list, CSR form) ----------------
+    # Group g (a distinct build key, in sorted-key order) owns
+    # dup_indices[dup_offsets[g] : dup_offsets[g] + group_count[g]].
+    dup_offsets: jax.Array   # (capacity + 1,) int32
+    dup_indices: jax.Array   # (capacity,)     int32 (build values, key-sorted)
+    group_count: jax.Array   # (capacity,)     int32 replicas per distinct key
+    # --- stats ------------------------------------------------------------
+    n_unique: jax.Array      # () int32 distinct keys
+    n_build: jax.Array       # () int32 build rows
+    overflow: jax.Array      # () int32 entries dropped by bucket overflow
+    hash_mode: str = dataclasses.field(metadata={"static": True},
+                                       default=HASH_IDENTITY)
+
+    @property
+    def num_buckets(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def bucket_width(self) -> int:
+        return self.keys.shape[1]
+
+
+class _Groups(NamedTuple):
+    sorted_keys: jax.Array
+    sorted_vals: jax.Array
+    is_first: jax.Array
+    uid: jax.Array
+    n_unique: jax.Array
+
+
+def _group(keys: jax.Array, values: jax.Array) -> _Groups:
+    order = jnp.argsort(keys, stable=True)
+    sk, sv = keys[order], values[order]
+    is_first = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    uid = (jnp.cumsum(is_first) - 1).astype(jnp.int32)
+    return _Groups(sk, sv, is_first, uid, is_first.sum().astype(jnp.int32))
+
+
+def build_table(
+    keys: jax.Array,
+    values: jax.Array,
+    *,
+    num_buckets: int,
+    bucket_width: int = 128,
+    hash_mode: str = HASH_IDENTITY,
+) -> JSPIMTable:
+    """Algorithm 1: build hash table H and duplication list L.
+
+    ``keys``/``values`` are the build (dimension) column and its payloads
+    (typically row indices).  ``num_buckets`` must be a power of two.
+    """
+    assert num_buckets & (num_buckets - 1) == 0, "num_buckets must be pow2"
+    keys = keys.astype(jnp.int32)
+    values = values.astype(jnp.int32)
+    n = keys.shape[0]
+    g = _group(keys, values)
+
+    # ---- duplication table (CSR over *all* groups; only dup groups are
+    # semantically in the paper's linked list — tag bit selects) ----------
+    counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), g.uid,
+                                 num_segments=n)
+    group_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(counts).astype(jnp.int32)])          # (n+1,)
+    dup_indices = g.sorted_vals                           # (n,)
+
+    # ---- one hash-table entry per group ----------------------------------
+    first_pos = group_start[:-1]                          # (n,) pos of head
+    ukeys = jnp.where(jnp.arange(n) < g.n_unique,
+                      g.sorted_keys[jnp.minimum(first_pos, n - 1)], EMPTY_KEY)
+    head_val = g.sorted_vals[jnp.minimum(first_pos, n - 1)]
+    is_dup = counts > 1
+    payload = jnp.where(is_dup, jnp.arange(n, dtype=jnp.int32), head_val)
+    uvals = (payload << 1) | is_dup.astype(jnp.int32)
+
+    # ---- place unique keys into buckets ----------------------------------
+    b = hash_bucket(ukeys, num_buckets, hash_mode)
+    live = jnp.arange(n) < g.n_unique
+    b = jnp.where(live, b, num_buckets)  # park padding past the last bucket
+    order2 = jnp.argsort(b, stable=True)
+    b_sorted = b[order2]
+    ukeys_s, uvals_s = ukeys[order2], uvals[order2]
+    bucket_start = jnp.searchsorted(b_sorted,
+                                    jnp.arange(num_buckets + 1)).astype(jnp.int32)
+    pos = jnp.arange(n, dtype=jnp.int32) - bucket_start[
+        jnp.minimum(b_sorted, num_buckets)]
+    ok = (b_sorted < num_buckets) & (pos < bucket_width)
+    flat = jnp.where(ok, b_sorted * bucket_width + pos,
+                     num_buckets * bucket_width)
+    tkeys = jnp.full((num_buckets * bucket_width,), EMPTY_KEY, jnp.int32)
+    tvals = jnp.zeros((num_buckets * bucket_width,), jnp.int32)
+    tkeys = tkeys.at[flat].set(ukeys_s, mode="drop")
+    tvals = tvals.at[flat].set(uvals_s, mode="drop")
+    overflow = ((~ok) & (b_sorted < num_buckets)).sum().astype(jnp.int32)
+
+    return JSPIMTable(
+        keys=tkeys.reshape(num_buckets, bucket_width),
+        values=tvals.reshape(num_buckets, bucket_width),
+        dup_offsets=group_start,
+        dup_indices=dup_indices,
+        group_count=counts,
+        n_unique=g.n_unique,
+        n_build=jnp.int32(n),
+        overflow=overflow,
+        hash_mode=hash_mode,
+    )
+
+
+def suggest_num_buckets(n_unique: int, bucket_width: int = 128,
+                        load: float = 0.5) -> int:
+    """Power-of-two bucket count targeting ``load`` occupancy."""
+    need = max(1, int(n_unique / (bucket_width * load)))
+    return 1 << (need - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# Update commands (§3.2.3) — functional versions of the PIM update interface.
+# ---------------------------------------------------------------------------
+
+def entry_update(table: JSPIMTable, bucket: jax.Array, slot: jax.Array,
+                 key: jax.Array, value_word: jax.Array) -> JSPIMTable:
+    """Entry Update: overwrite one (bucket, slot) cell, like a DRAM write."""
+    return dataclasses.replace(
+        table,
+        keys=table.keys.at[bucket, slot].set(jnp.int32(key)),
+        values=table.values.at[bucket, slot].set(jnp.int32(value_word)),
+    )
+
+
+def index_update(table: JSPIMTable, key: jax.Array,
+                 new_payload: jax.Array) -> JSPIMTable:
+    """Index Update: search for ``key``; on a match update its value."""
+    b = hash_bucket(jnp.int32(key), table.num_buckets, table.hash_mode)
+    row = table.keys[b]
+    match = row == jnp.int32(key)
+    slot = jnp.argmax(match)
+    found = match.any()
+    word = (jnp.int32(new_payload) << 1) | (table.values[b, slot] & 1)
+    values = table.values.at[b, slot].set(
+        jnp.where(found, word, table.values[b, slot]))
+    return dataclasses.replace(table, values=values)
+
+
+def table_update(table: JSPIMTable, bucket_ids: jax.Array,
+                 new_keys: jax.Array, new_values: jax.Array) -> JSPIMTable:
+    """Table Update: burst-write whole buckets (rows) at once."""
+    return dataclasses.replace(
+        table,
+        keys=table.keys.at[bucket_ids].set(new_keys.astype(jnp.int32)),
+        values=table.values.at[bucket_ids].set(new_values.astype(jnp.int32)),
+    )

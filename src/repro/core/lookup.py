@@ -1,0 +1,124 @@
+"""JSPIM search-engine semantics: probe, join, select (§3.1.1, §3.2).
+
+Two probe schedules:
+
+* ``probe``      — faithful *streaming* order: every probe key activates its
+                   bucket (gather of one row) and all ``bucket_width`` slots
+                   are compared in parallel (the comparator array), then a
+                   match-select (argmax) picks the value.  One vector op per
+                   probe — O(1) in bucket occupancy, the paper's core claim.
+* ``probe_deduped`` — the RLU coalescing window generalized: dedup the probe
+                   block first, probe unique keys only, scatter results back.
+                   Duplicated fact keys cost one activation total.
+
+``join`` expands matches through the duplication table (CSR) with a fixed
+output capacity; ``select_where_eq`` and ``select_distinct`` are the paper's
+SELECT paths.  Pure-JAX implementations here double as the oracle for the
+Pallas kernel in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dedup
+from repro.core.hash_table import EMPTY_KEY, JSPIMTable, hash_bucket
+
+
+class ProbeResult(NamedTuple):
+    found: jax.Array    # (m,) bool
+    payload: jax.Array  # (m,) int32 — row index OR duplication-group id
+    is_dup: jax.Array   # (m,) bool — tag bit from the value word
+
+
+def probe(table: JSPIMTable, probe_keys: jax.Array) -> ProbeResult:
+    """Streaming associative search: one bucket activation per probe."""
+    k = probe_keys.astype(jnp.int32)
+    b = hash_bucket(k, table.num_buckets, table.hash_mode)
+    rows_k = table.keys[b]          # (m, W)   the "row buffer"
+    rows_v = table.values[b]        # (m, W)
+    match = rows_k == k[:, None]    # comparator array
+    found = match.any(axis=-1) & (k != EMPTY_KEY)
+    slot = jnp.argmax(match, axis=-1)  # match-select unit
+    word = jnp.take_along_axis(rows_v, slot[:, None], axis=-1)[:, 0]
+    return ProbeResult(found, word >> 1, (word & 1).astype(bool))
+
+
+def probe_deduped(table: JSPIMTable, probe_keys: jax.Array,
+                  unique_capacity: int | None = None) -> ProbeResult:
+    """Coalescing-window schedule: dedup, probe uniques, scatter back."""
+    m = probe_keys.shape[0]
+    cap = unique_capacity or m
+    co = dedup.coalesce(probe_keys, cap, pad=int(EMPTY_KEY))
+    u = probe(table, co.unique)
+    return ProbeResult(u.found[co.inverse], u.payload[co.inverse],
+                       u.is_dup[co.inverse])
+
+
+class JoinResult(NamedTuple):
+    """Fixed-capacity (left_row, right_row) match pairs."""
+    left: jax.Array    # (capacity,) int32, -1 padded
+    right: jax.Array   # (capacity,) int32, -1 padded
+    n_matches: jax.Array  # () int32 (may exceed capacity => truncated)
+    truncated: jax.Array  # () bool
+
+
+def _expand(table: JSPIMTable, pr: ProbeResult, capacity: int) -> JoinResult:
+    """CSR expansion of probe results through the duplication table."""
+    m = pr.found.shape[0]
+    # matches contributed by each probe: 0 (miss), 1 (unique), count (dup)
+    counts = jnp.where(
+        pr.found,
+        jnp.where(pr.is_dup, table.group_count[jnp.clip(pr.payload, 0,
+                  table.group_count.shape[0] - 1)], 1),
+        0).astype(jnp.int32)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(counts).astype(jnp.int32)])
+    total = offs[-1]
+    out_pos = jnp.arange(capacity, dtype=jnp.int32)
+    src = (jnp.searchsorted(offs, out_pos, side="right") - 1).astype(jnp.int32)
+    src_c = jnp.clip(src, 0, m - 1)
+    within = out_pos - offs[src_c]
+    grp = jnp.clip(pr.payload[src_c], 0, table.dup_offsets.shape[0] - 2)
+    dup_row = table.dup_indices[jnp.clip(table.dup_offsets[grp] + within, 0,
+                                         table.dup_indices.shape[0] - 1)]
+    right = jnp.where(pr.is_dup[src_c], dup_row, pr.payload[src_c])
+    valid = out_pos < total
+    return JoinResult(
+        left=jnp.where(valid, src_c, -1),
+        right=jnp.where(valid, right, -1),
+        n_matches=total,
+        truncated=total > capacity,
+    )
+
+
+def join(table: JSPIMTable, fact_keys: jax.Array, *, capacity: int,
+         deduped: bool = True,
+         unique_capacity: int | None = None) -> JoinResult:
+    """fact ⋈ dim: probe every fact key, expand duplicates via CSR.
+
+    ``left`` are fact-row indices, ``right`` dimension-row indices.
+    """
+    pr = (probe_deduped(table, fact_keys, unique_capacity)
+          if deduped else probe(table, fact_keys))
+    return _expand(table, pr, capacity)
+
+
+def select_where_eq(table: JSPIMTable, key: jax.Array, *,
+                    capacity: int) -> JoinResult:
+    """SELECT * WHERE col = key — a single PIM read (one probe)."""
+    pr = probe(table, jnp.asarray([key], jnp.int32))
+    return _expand(table, pr, capacity)
+
+
+def select_distinct(table: JSPIMTable, *, capacity: int) -> jax.Array:
+    """SELECT DISTINCT — the hash table already stores exactly the uniques."""
+    flat = table.keys.reshape(-1)
+    live = flat != EMPTY_KEY
+    # compact the live keys into the first n_unique slots (stable)
+    idx = jnp.cumsum(live) - 1
+    out = jnp.full((capacity,), int(EMPTY_KEY), jnp.int32)
+    slot = jnp.where(live & (idx < capacity), idx, capacity)
+    return out.at[slot].set(flat, mode="drop")

@@ -1,0 +1,49 @@
+"""Skew generation and measurement (paper §4.1: Zipf 0 / 0.5 / 1.5 / 2)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def zipf_weights(n: int, s: float) -> np.ndarray:
+    """Normalized Zipf(s) pmf over ranks 1..n (s=0 -> uniform)."""
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    w = ranks ** (-float(s))
+    return w / w.sum()
+
+
+def zipf_sample(n_keys: int, size: int, s: float, seed: int = 0,
+                shuffle_ranks: bool = True) -> np.ndarray:
+    """Sample ``size`` keys in [0, n_keys) with Zipf(s) popularity.
+
+    ``shuffle_ranks`` decouples popularity rank from key value (realistic:
+    the hot key is not necessarily key 0).
+    """
+    rng = np.random.default_rng(seed)
+    w = zipf_weights(n_keys, s)
+    keys = rng.choice(n_keys, size=size, p=w).astype(np.int32)
+    if shuffle_ranks:
+        perm = rng.permutation(n_keys).astype(np.int32)
+        keys = perm[keys]
+    return keys
+
+
+def zipf_sample_jax(key: jax.Array, n_keys: int, size: int,
+                    s: float) -> jax.Array:
+    """On-device Zipf sampling via inverse-CDF (used by the data pipeline)."""
+    w = jnp.asarray(zipf_weights(n_keys, s), jnp.float32)
+    cdf = jnp.cumsum(w)
+    u = jax.random.uniform(key, (size,))
+    return jnp.searchsorted(cdf, u).astype(jnp.int32).clip(0, n_keys - 1)
+
+
+def skew_stats(keys: np.ndarray) -> dict:
+    """Duplication factor, hottest-key share, distinct count."""
+    vals, counts = np.unique(np.asarray(keys), return_counts=True)
+    return {
+        "n": int(keys.size),
+        "distinct": int(vals.size),
+        "dup_factor": float(keys.size / vals.size),
+        "max_share": float(counts.max() / keys.size),
+    }

@@ -1,0 +1,2 @@
+from repro.data.pipeline import Prefetcher, ZipfTokenStream, shard_batch
+__all__ = ["Prefetcher", "ZipfTokenStream", "shard_batch"]

@@ -1,0 +1,71 @@
+"""Baseline join implementations the paper compares against.
+
+* ``sort_merge_join``      — the CPU-idiomatic algorithm (Mirzadeh et al.
+                             found it competitive on PIM); used as the
+                             compiled-XLA baseline for on-host timing.
+* ``partitioned_hash_join``— PID-Join-style: radix-partition both sides,
+                             per-partition build+probe.  Exhibits the
+                             partitioning passes and skew imbalance the paper
+                             criticizes (the hottest partition does the work).
+* ``numpy_join_oracle``    — host oracle for correctness tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sort_merge_join_unique(fact_keys: jax.Array,
+                           dim_keys: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """PK join (dim keys unique): returns (found, dim_row) per fact row."""
+    order = jnp.argsort(dim_keys)
+    sk = dim_keys[order]
+    pos = jnp.searchsorted(sk, fact_keys).astype(jnp.int32)
+    pos_c = jnp.minimum(pos, sk.shape[0] - 1)
+    found = sk[pos_c] == fact_keys
+    return found, jnp.where(found, order[pos_c], -1)
+
+
+def partitioned_hash_join_unique(fact_keys: jax.Array, dim_keys: jax.Array,
+                                 num_partitions: int = 16
+                                 ) -> tuple[jax.Array, jax.Array]:
+    """PID-style partitioned join (PK dims).  Functionally identical output;
+    structurally it performs the partition passes (sort by radix) that the
+    paper identifies as pure overhead for PIM."""
+    mask = num_partitions - 1
+    f_part = fact_keys & mask
+    d_part = dim_keys & mask
+    # partition pass (the data movement PID pays)
+    f_ord = jnp.argsort(f_part, stable=True)
+    d_ord = jnp.argsort(d_part, stable=True)
+    fk = fact_keys[f_ord]
+    dk = dim_keys[d_ord]
+    # per-partition probe == global sorted probe because partition bits are
+    # the low key bits (radix): emulate with a secondary sort inside
+    # partitions, then searchsorted on the (part, key) composite.
+    f_comp = fk.astype(jnp.int64)
+    d_comp = dk.astype(jnp.int64)
+    d_ord2 = jnp.argsort(d_comp)
+    sd = d_comp[d_ord2]
+    pos = jnp.searchsorted(sd, f_comp).astype(jnp.int32)
+    pos_c = jnp.minimum(pos, sd.shape[0] - 1)
+    found_s = sd[pos_c] == f_comp
+    row_s = jnp.where(found_s, d_ord[d_ord2[pos_c]], -1)
+    # un-permute to fact order
+    found = jnp.zeros_like(found_s).at[f_ord].set(found_s)
+    row = jnp.full_like(row_s, -1).at[f_ord].set(row_s)
+    return found, row
+
+
+def numpy_join_oracle(fact_keys: np.ndarray,
+                      dim_keys: np.ndarray) -> set[tuple[int, int]]:
+    """All (fact_row, dim_row) match pairs — general (duplicates allowed)."""
+    out: set[tuple[int, int]] = set()
+    by_key: dict[int, list[int]] = {}
+    for j, k in enumerate(dim_keys.tolist()):
+        by_key.setdefault(k, []).append(j)
+    for i, k in enumerate(fact_keys.tolist()):
+        for j in by_key.get(k, ()):
+            out.add((i, j))
+    return out

@@ -1,0 +1,68 @@
+"""JSPIM join integration for the column-store engine.
+
+A ``DimIndex`` is the paper's persistent auxiliary structure: dictionary +
+hash table + duplication list, built once per (dimension table, key column)
+and maintained across queries (§3.2.3).  Probes run through either the XLA
+path (compiled on any backend) or the Pallas kernels (TPU; interpret on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Dictionary, JSPIMTable, build_dictionary, build_table,
+                        encode, join as core_join, probe, probe_deduped,
+                        suggest_num_buckets)
+from repro.core.lookup import JoinResult, ProbeResult
+from repro.kernels import probe_table
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DimIndex:
+    dictionary: Dictionary
+    table: JSPIMTable
+
+
+def _default_bucket_width() -> int:
+    """Hardware adaptation: bucket == one DRAM subarray row in the paper,
+    one 128-lane VMEM row-block on TPU — but on a CPU host a 128-wide
+    bucket gather moves 128x the bytes per probe, so narrow buckets win.
+    (DESIGN.md §2: the bucket geometry follows the memory system.)"""
+    return 128 if jax.default_backend() == "tpu" else 8
+
+
+def build_dim_index(dim_keys: jax.Array, *, bucket_width: int | None = None,
+                    load: float = 0.5) -> DimIndex:
+    """Encode the build column, then build the unique-key hash table whose
+    values are dimension-row indices."""
+    bucket_width = bucket_width or _default_bucket_width()
+    n = int(dim_keys.shape[0])
+    d = build_dictionary(dim_keys, capacity=n)
+    codes = encode(d, dim_keys)
+    nb = suggest_num_buckets(n, bucket_width, load)
+    tbl = build_table(codes, jnp.arange(n, dtype=jnp.int32),
+                      num_buckets=nb, bucket_width=bucket_width)
+    return DimIndex(dictionary=d, table=tbl)
+
+
+def lookup(index: DimIndex, fact_keys: jax.Array, *, impl: str = "xla",
+           deduped: bool = False) -> ProbeResult:
+    """Probe fact keys; for PK dimensions payload is the dim-row index."""
+    codes = encode(index.dictionary, fact_keys)
+    if impl == "pallas":
+        return probe_table(index.table, codes)
+    if impl == "pallas_stream":
+        return probe_table(index.table, codes, schedule="stream")
+    if deduped:
+        return probe_deduped(index.table, codes)
+    return probe(index.table, codes)
+
+
+def join_pairs(index: DimIndex, fact_keys: jax.Array, *, capacity: int,
+               deduped: bool = True) -> JoinResult:
+    """General join (duplication-list expansion), fixed output capacity."""
+    codes = encode(index.dictionary, fact_keys)
+    return core_join(index.table, codes, capacity=capacity, deduped=deduped)

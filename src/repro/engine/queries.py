@@ -1,0 +1,188 @@
+"""The 13 SSB queries (Q1.1–Q4.3), spec-driven, with pluggable join engine.
+
+Modes:
+  * "jspim"     — joins offloaded to the JSPIM path (prebuilt DimIndex probe);
+                  dimension predicates applied while streaming results back
+                  (§4.1.5: filter-on-the-fly during PIM→CPU streaming).
+  * "baseline"  — compiled sort-merge joins (DuckDB-stand-in on this host).
+  * "pid"       — partitioned-hash joins (PID-Join-style partition passes).
+
+Every query returns (total, groups) where ``groups`` is a dense vector over a
+small composite group-key space (segment-summed revenue), so baseline/jspim
+agreement is exact and testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import baselines
+from repro.engine.join import DimIndex, build_dim_index, lookup
+from repro.engine.table import Table
+
+FACT_FK = {"customer": "custkey", "supplier": "suppkey",
+           "part": "partkey", "date": "orderdate"}
+DIM_PK = {"customer": "custkey", "supplier": "suppkey",
+          "part": "partkey", "date": "datekey"}
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    name: str
+    dim_filters: dict[str, Callable[[Table], jax.Array]]
+    fact_filter: Callable[[Table], jax.Array] | None
+    measure: Callable[[Table], jax.Array]
+    group_by: tuple[tuple[str, str, int], ...] = ()  # (dim, col, cardinality)
+
+
+def _between(col, lo, hi):
+    return lambda t: (t[col] >= lo) & (t[col] <= hi)
+
+
+def _eq(col, v):
+    return lambda t: t[col] == v
+
+
+def _in(col, vals):
+    def f(t):
+        m = jnp.zeros_like(t[col], bool)
+        for v in vals:
+            m = m | (t[col] == v)
+        return m
+    return f
+
+
+def _rev(t):
+    return t["revenue"]
+
+
+def _profit(t):
+    return t["revenue"] - t["supplycost"]
+
+
+def _discounted(t):
+    return t["extendedprice"] * t["discount"]
+
+
+SSB_QUERIES: dict[str, QuerySpec] = {}
+
+
+def _q(name, dim_filters, fact_filter, measure, group_by=()):
+    SSB_QUERIES[name] = QuerySpec(name, dim_filters, fact_filter, measure,
+                                  tuple(group_by))
+
+
+# --- Q1.x: filter-heavy, single date join -------------------------------
+_q("Q1.1", {"date": _eq("year", 1993)},
+   lambda t: (t["discount"] >= 1) & (t["discount"] <= 3) & (t["quantity"] < 25),
+   _discounted)
+_q("Q1.2", {"date": _eq("yearmonthnum", 199401)},
+   lambda t: (t["discount"] >= 4) & (t["discount"] <= 6)
+   & (t["quantity"] >= 26) & (t["quantity"] <= 35),
+   _discounted)
+_q("Q1.3", {"date": lambda t: (t["weeknuminyear"] == 6) & (t["year"] == 1994)},
+   lambda t: (t["discount"] >= 5) & (t["discount"] <= 7)
+   & (t["quantity"] >= 26) & (t["quantity"] <= 35),
+   _discounted)
+# --- Q2.x: part ⋈ supplier ⋈ date ----------------------------------------
+_q("Q2.1", {"part": _eq("category", 12), "supplier": _eq("region", 1)},
+   None, _rev, [("date", "year", 2000), ("part", "brand", 1000)])
+_q("Q2.2", {"part": _between("brand", 260, 267), "supplier": _eq("region", 2)},
+   None, _rev, [("date", "year", 2000), ("part", "brand", 1000)])
+_q("Q2.3", {"part": _eq("brand", 260), "supplier": _eq("region", 3)},
+   None, _rev, [("date", "year", 2000), ("part", "brand", 1000)])
+# --- Q3.x: customer ⋈ supplier ⋈ date -------------------------------------
+_q("Q3.1", {"customer": _eq("region", 2), "supplier": _eq("region", 2),
+            "date": _between("year", 1992, 1997)},
+   None, _rev, [("customer", "nation", 25), ("supplier", "nation", 25),
+                ("date", "year", 2000)])
+_q("Q3.2", {"customer": _eq("nation", 14), "supplier": _eq("nation", 14),
+            "date": _between("year", 1992, 1997)},
+   None, _rev, [("customer", "city", 250), ("supplier", "city", 250),
+                ("date", "year", 2000)])
+_q("Q3.3", {"customer": _in("city", (141, 145)), "supplier": _in("city", (141, 145)),
+            "date": _between("year", 1992, 1997)},
+   None, _rev, [("customer", "city", 250), ("supplier", "city", 250),
+                ("date", "year", 2000)])
+_q("Q3.4", {"customer": _in("city", (141, 145)), "supplier": _in("city", (141, 145)),
+            "date": _eq("yearmonthnum", 199712)},
+   None, _rev, [("customer", "city", 250), ("supplier", "city", 250),
+                ("date", "year", 2000)])
+# --- Q4.x: all four dims ----------------------------------------------------
+_q("Q4.1", {"customer": _eq("region", 1), "supplier": _eq("region", 1),
+            "part": _in("mfgr", (0, 1))},
+   None, _profit, [("date", "year", 2000), ("customer", "nation", 25)])
+_q("Q4.2", {"customer": _eq("region", 1), "supplier": _eq("region", 1),
+            "part": _in("mfgr", (0, 1)), "date": _in("year", (1997, 1998))},
+   None, _profit, [("date", "year", 2000), ("supplier", "nation", 25),
+                   ("part", "category", 25)])
+_q("Q4.3", {"customer": _eq("region", 1), "supplier": _eq("nation", 6),
+            "part": _eq("category", 3), "date": _in("year", (1997, 1998))},
+   None, _profit, [("date", "year", 2000), ("supplier", "city", 250),
+                   ("part", "brand", 1000)])
+
+
+class SSBEngine:
+    """Executes SSB queries with joins delegated to the selected engine."""
+
+    def __init__(self, tables: dict[str, Table], mode: str = "jspim",
+                 probe_impl: str = "xla"):
+        self.tables = tables
+        self.mode = mode
+        self.probe_impl = probe_impl
+        self.indexes: dict[str, DimIndex] = {}
+        if mode == "jspim":
+            # built once, reused across queries (§3.2.3 persistence)
+            for dim, pk in DIM_PK.items():
+                self.indexes[dim] = build_dim_index(tables[dim][pk])
+
+    # -- join primitive: (found, dim_row) per fact row ---------------------
+    def _join(self, dim: str) -> tuple[jax.Array, jax.Array]:
+        fact = self.tables["lineorder"]
+        fk = fact[FACT_FK[dim]]
+        if self.mode == "jspim":
+            pr = lookup(self.indexes[dim], fk, impl=self.probe_impl)
+            return pr.found, jnp.where(pr.found, pr.payload, -1)
+        dk = self.tables[dim][DIM_PK[dim]]
+        if self.mode == "baseline":
+            return baselines.sort_merge_join_unique(fk, dk)
+        if self.mode == "pid":
+            return baselines.partitioned_hash_join_unique(fk, dk)
+        raise ValueError(self.mode)
+
+    def run(self, name: str) -> tuple[jax.Array, jax.Array]:
+        spec = SSB_QUERIES[name]
+        fact = self.tables["lineorder"]
+        mask = jnp.ones((fact.n_rows,), bool)
+        rows: dict[str, jax.Array] = {}
+        joined = set(spec.dim_filters) | {d for d, _, _ in spec.group_by}
+        for dim in sorted(joined):
+            found, r = self._join(dim)
+            rows[dim] = r
+            mask = mask & found
+            if dim in spec.dim_filters:
+                dmask = spec.dim_filters[dim](self.tables[dim])
+                # filter-on-the-fly while streaming results (paper §4.1.5)
+                mask = mask & dmask[jnp.clip(r, 0, dmask.shape[0] - 1)]
+        if spec.fact_filter is not None:
+            mask = mask & spec.fact_filter(fact)
+        measure = spec.measure(fact)
+        total = jnp.sum(jnp.where(mask, measure.astype(jnp.int32), 0))
+        if not spec.group_by:
+            return total, total[None]
+        # dense composite group key (small spaces by construction)
+        gk = jnp.zeros((fact.n_rows,), jnp.int32)
+        size = 1
+        for dim, col, card in spec.group_by:
+            c = self.tables[dim][col]
+            v = c[jnp.clip(rows[dim], 0, c.shape[0] - 1)] % card
+            gk = gk * card + v
+            size *= card
+        groups = jax.ops.segment_sum(
+            jnp.where(mask, measure.astype(jnp.int32), 0),
+            jnp.where(mask, gk, 0), num_segments=size)
+        return total, groups

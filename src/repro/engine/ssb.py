@@ -1,0 +1,98 @@
+"""Star Schema Benchmark data generator (ssb-dbgen-compatible shapes, §4.1).
+
+Integer-coded columns (the engine is int32 column-store; strings such as
+region names are dictionary-coded at generation time, exactly what JSPIM's
+encoding phase would do).  Row counts follow the paper's *linear* scaling:
+lineorder 6,000,000×SF; customer 30,000×SF; supplier 2,000×SF;
+part 200,000×SF; date 2,556 (7 years of days, fixed).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.engine.table import Table
+
+REGIONS = 5
+NATIONS = 25
+CITIES = 250
+MFGRS = 5
+CATEGORIES = 25
+BRANDS = 1000
+YEARS = (1992, 1998)  # inclusive
+
+
+def _dates(rng: np.random.Generator) -> dict:
+    n = 2556
+    datekey = np.arange(n, dtype=np.int32)
+    year = (YEARS[0] + datekey // 365).clip(max=YEARS[1]).astype(np.int32)
+    month = ((datekey % 365) // 31 + 1).clip(max=12).astype(np.int32)
+    return {
+        "datekey": datekey,
+        "year": year,
+        "yearmonthnum": (year * 100 + month).astype(np.int32),
+        "weeknuminyear": ((datekey % 365) // 7 + 1).astype(np.int32),
+    }
+
+
+def generate_ssb(sf: float, seed: int = 0) -> dict[str, Table]:
+    """Generate the five SSB tables at scale factor ``sf``."""
+    rng = np.random.default_rng(seed)
+    n_lo = max(1000, int(6_000_000 * sf))
+    n_cust = max(30, int(30_000 * sf))
+    n_supp = max(20, int(2_000 * sf))
+    n_part = max(200, int(200_000 * sf))
+
+    date = _dates(rng)
+    n_date = date["datekey"].size
+
+    def geo(n):
+        region = rng.integers(0, REGIONS, n, dtype=np.int32)
+        nation = region * (NATIONS // REGIONS) + rng.integers(
+            0, NATIONS // REGIONS, n, dtype=np.int32)
+        city = nation * (CITIES // NATIONS) + rng.integers(
+            0, CITIES // NATIONS, n, dtype=np.int32)
+        return region, nation, city
+
+    c_region, c_nation, c_city = geo(n_cust)
+    customer = {
+        "custkey": np.arange(n_cust, dtype=np.int32),
+        "city": c_city, "nation": c_nation, "region": c_region,
+    }
+    s_region, s_nation, s_city = geo(n_supp)
+    supplier = {
+        "suppkey": np.arange(n_supp, dtype=np.int32),
+        "city": s_city, "nation": s_nation, "region": s_region,
+    }
+    mfgr = rng.integers(0, MFGRS, n_part, dtype=np.int32)
+    category = mfgr * (CATEGORIES // MFGRS) + rng.integers(
+        0, CATEGORIES // MFGRS, n_part, dtype=np.int32)
+    brand = category * (BRANDS // CATEGORIES) + rng.integers(
+        0, BRANDS // CATEGORIES, n_part, dtype=np.int32)
+    part = {
+        "partkey": np.arange(n_part, dtype=np.int32),
+        "mfgr": mfgr, "category": category, "brand": brand,
+    }
+
+    quantity = rng.integers(1, 51, n_lo, dtype=np.int32)
+    discount = rng.integers(0, 11, n_lo, dtype=np.int32)
+    extendedprice = rng.integers(100, 100_000, n_lo, dtype=np.int32)
+    supplycost = (extendedprice * 6 // 10).astype(np.int32)
+    lineorder = {
+        "orderkey": np.arange(n_lo, dtype=np.int32),
+        "custkey": rng.integers(0, n_cust, n_lo, dtype=np.int32),
+        "partkey": rng.integers(0, n_part, n_lo, dtype=np.int32),
+        "suppkey": rng.integers(0, n_supp, n_lo, dtype=np.int32),
+        "orderdate": rng.integers(0, n_date, n_lo, dtype=np.int32),
+        "quantity": quantity,
+        "discount": discount,
+        "extendedprice": extendedprice,
+        "revenue": (extendedprice * (100 - discount) // 100).astype(np.int32),
+        "supplycost": supplycost,
+    }
+    return {
+        "lineorder": Table.from_numpy(lineorder),
+        "customer": Table.from_numpy(customer),
+        "supplier": Table.from_numpy(supplier),
+        "part": Table.from_numpy(part),
+        "date": Table.from_numpy(date),
+    }

@@ -1,0 +1,46 @@
+"""Column-store tables (§3.2.1: "JSPIM adopts a column-store approach")."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Table:
+    """An immutable integer column-store relation."""
+
+    columns: Mapping[str, jax.Array]  # name -> (n_rows,) int32
+
+    def __post_init__(self):
+        lens = {k: v.shape[0] for k, v in self.columns.items()}
+        assert len(set(lens.values())) == 1, f"ragged columns: {lens}"
+
+    @property
+    def n_rows(self) -> int:
+        return next(iter(self.columns.values())).shape[0]
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    def names(self):
+        return list(self.columns.keys())
+
+    def gather(self, rows: jax.Array) -> "Table":
+        """Row subset (rows may contain -1 = null -> clamped, caller masks)."""
+        idx = jnp.clip(rows, 0, self.n_rows - 1)
+        return Table({k: v[idx] for k, v in self.columns.items()})
+
+    def filter_mask(self, mask: jax.Array) -> np.ndarray:
+        """Materialize matching row indices (host-side, benchmarking aid)."""
+        return np.flatnonzero(np.asarray(mask))
+
+    @staticmethod
+    def from_numpy(cols: Mapping[str, np.ndarray]) -> "Table":
+        return Table({k: jnp.asarray(v, jnp.int32) for k, v in cols.items()})
+
+    def nbytes(self) -> int:
+        return sum(int(np.prod(v.shape)) * 4 for v in self.columns.values())

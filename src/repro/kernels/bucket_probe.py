@@ -1,0 +1,137 @@
+"""Pallas TPU kernels for the JSPIM subarray search engine (§3.1.1).
+
+Two kernels, mirroring the two probe schedules:
+
+``probe_rows_kernel`` — the **comparator array**: bucket rows are already in
+    flight (gathered/"activated" by XLA or by the streaming kernel below) and
+    the kernel fuses the W-lane parallel compare + match-select over a
+    (PB, W) VMEM tile.  One VPU compare per probe row: the TPU realization of
+    "all entries of a selected bucket examined simultaneously".  Fusing here
+    avoids materializing the (m, W) match mask in HBM.
+
+``bucket_probe_stream_kernel`` — the **row activation pipeline**: bucket ids
+    are scalar-prefetched and drive the BlockSpec ``index_map``, so each grid
+    step DMAs exactly the needed (1, W) bucket row from HBM into VMEM — the
+    TPU analogue of activating one subarray row.  Pallas double-buffers the
+    DMA against the compare of the previous step: the RLU's fetch∥search∥
+    return pipeline (Fig. 7) falls out of the grid pipeline for free.
+
+VMEM budget: (PB, W)=（256, 128) int32 tiles → 128 KiB per operand, well
+under the ~16 MiB VMEM of a TensorCore; lane dim W is a multiple of 128 and
+sublane PB a multiple of 8 (MXU/VPU alignment).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.hash_table import EMPTY_KEY
+from repro.kernels.ref import NULL_WORD
+
+# plain Python literals for in-kernel use (jnp module constants would be
+# captured as traced consts, which pallas_call forbids)
+_EMPTY = -0x7FFFFFFF
+_NULL = -2
+
+# --------------------------------------------------------------------------
+# Kernel A: comparator array over pre-activated rows
+# --------------------------------------------------------------------------
+
+
+def _probe_rows_kernel(pk_ref, rk_ref, rv_ref, out_ref):
+    pk = pk_ref[...]                       # (PB, 1)
+    match = rk_ref[...] == pk              # (PB, W) comparator array
+    found = jnp.any(match, axis=1, keepdims=True) & (pk != _EMPTY)
+    # match-select: rows hold at most one match (unique keys per bucket)
+    word = jnp.sum(jnp.where(match, rv_ref[...], 0), axis=1, keepdims=True)
+    out_ref[...] = jnp.where(found, word.astype(jnp.int32), jnp.int32(_NULL))
+
+
+@functools.partial(jax.jit, static_argnames=("block_pb", "interpret"))
+def probe_rows(probe_keys, rows_k, rows_v, *, block_pb: int = 256,
+               interpret: bool = True):
+    """(m,), (m, W), (m, W) -> (m,) packed value words.
+
+    m is padded to a multiple of ``block_pb``; W must be a multiple of 128
+    for compiled TPU mode (any W works in interpret mode).
+    """
+    m, w = rows_k.shape
+    pb = min(block_pb, max(8, m))
+    pad = (-m) % pb
+    pk = jnp.pad(probe_keys.astype(jnp.int32), (0, pad),
+                 constant_values=int(EMPTY_KEY))[:, None]
+    rk = jnp.pad(rows_k.astype(jnp.int32), ((0, pad), (0, 0)))
+    rv = jnp.pad(rows_v.astype(jnp.int32), ((0, pad), (0, 0)))
+    grid = ((m + pad) // pb,)
+    out = pl.pallas_call(
+        _probe_rows_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((pb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((pb, w), lambda i: (i, 0)),
+            pl.BlockSpec((pb, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((pb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + pad, 1), jnp.int32),
+        interpret=interpret,
+        name="jspim_probe_rows",
+    )(pk, rk, rv)
+    return out[:m, 0]
+
+
+# --------------------------------------------------------------------------
+# Kernel B: streaming row activation via scalar-prefetched index_map
+# --------------------------------------------------------------------------
+
+
+def _stream_kernel(bids_ref, pk_ref, rk_ref, rv_ref, out_ref):
+    del bids_ref  # consumed by the index_maps (the "RLU" address driver)
+    j = pl.program_id(1)
+    pk = pk_ref[j, 0]
+    match = rk_ref[...] == pk              # (1, W) comparator array
+    found = jnp.any(match) & (pk != _EMPTY)
+    word = jnp.sum(jnp.where(match, rv_ref[...], 0)).astype(jnp.int32)
+    out_ref[j, 0] = jnp.where(found, word, jnp.int32(_NULL))
+
+
+@functools.partial(jax.jit, static_argnames=("block_pb", "interpret"))
+def bucket_probe_stream(table_keys, table_vals, probe_keys, bucket_ids, *,
+                        block_pb: int = 256, interpret: bool = True):
+    """Streaming probe: one bucket-row DMA ("activation") per probe.
+
+    table_keys/table_vals: (B, W); probe_keys/bucket_ids: (m,).
+    Returns (m,) packed value words.
+    """
+    m = probe_keys.shape[0]
+    _, w = table_keys.shape
+    pb = min(block_pb, max(8, m))
+    pad = (-m) % pb
+    pk = jnp.pad(probe_keys.astype(jnp.int32), (0, pad),
+                 constant_values=int(EMPTY_KEY))[:, None]
+    bids = jnp.pad(bucket_ids.astype(jnp.int32), (0, pad))
+    grid = ((m + pad) // pb, pb)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            # probe block: revisited across j; fetched once per i
+            pl.BlockSpec((pb, 1), lambda i, j, bids: (i, 0)),
+            # the row activation: data-dependent block index from SMEM
+            pl.BlockSpec((1, w), lambda i, j, bids: (bids[i * pb + j], 0)),
+            pl.BlockSpec((1, w), lambda i, j, bids: (bids[i * pb + j], 0)),
+        ],
+        out_specs=pl.BlockSpec((pb, 1), lambda i, j, bids: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _stream_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m + pad, 1), jnp.int32),
+        interpret=interpret,
+        name="jspim_bucket_probe_stream",
+    )(bids, pk, table_keys.astype(jnp.int32), table_vals.astype(jnp.int32))
+    return out[:m, 0]

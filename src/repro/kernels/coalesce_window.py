@@ -1,0 +1,62 @@
+"""Pallas kernel for the RLU coalescing window (§3.2.1, Fig. 7).
+
+The RLU's 8-entry optimization buffer filters probe keys that match any of
+the previous ``window-1`` keys, so repeated fact keys cost one activation.
+In hardware this is a shift-register + comparator bank; on the VPU it is
+``window-1`` shifted lane compares OR-ed together — one vector op each.
+
+The kernel emits the filter mask for a probe block; the block boundary
+carries the previous block's tail (so the window spans blocks exactly like
+the streaming hardware).  ``ref`` oracle: repro.core.dedup.windowed_coalesce_mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _window_kernel(pk_ref, tail_ref, mask_ref, *, window: int):
+    pk = pk_ref[...]                    # (1, PB) current probe block
+    tail = tail_ref[...]                # (1, W-1) previous block's tail
+    seq = jnp.concatenate([tail, pk], axis=1)   # (1, W-1+PB)
+    pb = pk.shape[1]
+    hit = jnp.zeros((1, pb), jnp.bool_)
+    for d in range(1, window):          # comparator bank: W-1 shifted lanes
+        prev = jax.lax.dynamic_slice(seq, (0, window - 1 - d), (1, pb))
+        hit = hit | (prev == pk)
+    mask_ref[...] = hit
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block", "interpret"))
+def coalesce_window_mask(keys: jax.Array, *, window: int = 8,
+                         block: int = 256, interpret: bool = True
+                         ) -> jax.Array:
+    """(m,) int32 -> (m,) bool: True where the probe is filtered (a repeat
+    within the previous ``window-1`` probes)."""
+    m = keys.shape[0]
+    pb = min(block, max(8, m))
+    pad = (-m) % pb
+    pk = jnp.pad(keys.astype(jnp.int32), (0, pad),
+                 constant_values=-0x7FFFFFFF)[None, :]
+    n_blocks = (m + pad) // pb
+    # per-block tails: W-1 keys preceding each block (sentinel before t=0)
+    shifted = jnp.pad(pk[0], (window - 1, 0),
+                      constant_values=-0x7FFFFFFE)[:m + pad]
+    tails = shifted.reshape(n_blocks, pb)[:, :window - 1]
+
+    out = pl.pallas_call(
+        functools.partial(_window_kernel, window=window),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, pb), lambda i: (0, i)),
+            pl.BlockSpec((1, window - 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, pb), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, m + pad), jnp.bool_),
+        interpret=interpret,
+        name="jspim_coalesce_window",
+    )(pk, tails)
+    return out[0, :m]

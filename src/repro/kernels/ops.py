@@ -1,0 +1,62 @@
+"""jit'd public wrappers dispatching between Pallas kernels and XLA paths.
+
+``probe_table`` is the production entry point used by ``repro.engine`` and
+the LM integration: it picks the gathered (XLA row gather + fused Pallas
+comparator) schedule by default, and the faithful streaming schedule
+(per-probe DMA row activation) on request.  On CPU the kernels run in
+interpret mode; on TPU compiled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hash_table import JSPIMTable, hash_bucket
+from repro.core.lookup import ProbeResult
+from repro.kernels import bucket_probe, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def probe_table(table: JSPIMTable, probe_keys: jax.Array, *,
+                schedule: str = "gathered",
+                block_pb: int = 256,
+                interpret: bool | None = None) -> ProbeResult:
+    """Associative search through the Pallas kernels.
+
+    schedule:
+      * "gathered" — XLA gathers the activated rows, Pallas fuses
+        compare+select (high-throughput TPU path).
+      * "stream"   — scalar-prefetched per-probe row DMA (faithful JSPIM
+        streaming pipeline).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    keys = probe_keys.astype(jnp.int32)
+    bids = hash_bucket(keys, table.num_buckets, table.hash_mode)
+    if schedule == "gathered":
+        rows_k = table.keys[bids]
+        rows_v = table.values[bids]
+        words = bucket_probe.probe_rows(keys, rows_k, rows_v,
+                                        block_pb=block_pb,
+                                        interpret=interpret)
+    elif schedule == "stream":
+        words = bucket_probe.bucket_probe_stream(table.keys, table.values,
+                                                 keys, bids,
+                                                 block_pb=block_pb,
+                                                 interpret=interpret)
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+    found, payload, is_dup = ref.unpack_words(words)
+    return ProbeResult(found, payload, is_dup)
+
+
+def probe_table_ref(table: JSPIMTable, probe_keys: jax.Array) -> ProbeResult:
+    """Oracle path (pure jnp) with identical signature."""
+    keys = probe_keys.astype(jnp.int32)
+    bids = hash_bucket(keys, table.num_buckets, table.hash_mode)
+    words = ref.bucket_probe_ref(table.keys, table.values, keys, bids)
+    found, payload, is_dup = ref.unpack_words(words)
+    return ProbeResult(found, payload, is_dup)

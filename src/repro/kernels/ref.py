@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.hash_table import EMPTY_KEY
+
+# value word meaning "no match": payload -1, is_dup 0  (-1 << 1 == -2)
+NULL_WORD = jnp.int32(-2)
+
+
+def probe_rows_ref(probe_keys, rows_k, rows_v):
+    """Comparator-array semantics over pre-activated bucket rows.
+
+    probe_keys: (m,) int32; rows_k/rows_v: (m, W) int32 (the bucket row each
+    probe activated).  Returns the packed value word (payload<<1 | is_dup),
+    NULL_WORD when absent.  Table invariant: keys are unique within a bucket.
+    """
+    match = rows_k == probe_keys[:, None]
+    found = match.any(axis=1) & (probe_keys != EMPTY_KEY)
+    # unique-match select: sum of the single matching (non-negative) word
+    word = jnp.sum(jnp.where(match, rows_v, 0), axis=1).astype(jnp.int32)
+    return jnp.where(found, word, NULL_WORD)
+
+
+def bucket_probe_ref(table_keys, table_vals, probe_keys, bucket_ids):
+    """Full streaming probe: activate row ``bucket_ids[i]`` per probe, then
+    comparator-array select.  (m,) -> (m,) packed value words."""
+    rows_k = table_keys[bucket_ids]
+    rows_v = table_vals[bucket_ids]
+    return probe_rows_ref(probe_keys, rows_k, rows_v)
+
+
+def unpack_words(words):
+    """Packed value word -> (found, payload, is_dup)."""
+    found = words != NULL_WORD
+    return found, words >> 1, (words & 1).astype(bool)

@@ -1,0 +1,6 @@
+"""Launchers: mesh, dry-run, roofline, train/serve drivers, elastic reshard."""
+from repro.launch.mesh import dp_size, make_host_mesh, make_production_mesh
+from repro.launch.sharding import constrain, param_spec_for, param_specs, spec
+
+__all__ = ["dp_size", "make_host_mesh", "make_production_mesh", "constrain",
+           "param_spec_for", "param_specs", "spec"]

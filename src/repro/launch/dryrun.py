@@ -1,0 +1,415 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+# NOTE: no `from __future__ import annotations` here — the XLA_FLAGS lines
+# above must stay the first two statements of the module.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the full sharding config (FSDP+TP parameters,
+EP experts, sharded optimizer state, sharded KV caches), lowers the real
+train/prefill/serve step with ShapeDtypeStruct inputs (no allocation),
+compiles it for the 256-chip single-pod or 512-chip two-pod mesh, and
+records memory_analysis / cost_analysis / per-collective bytes into a JSON
+report consumed by EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      --out reports/dryrun
+Hillclimb knobs: --no-dedup-embed --moment-dtype int8 --microbatches N
+                 --remat none --attn-chunk N
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs, shape_applicable
+from repro.configs.shapes import SHAPES, input_specs
+from repro.launch import roofline
+from repro.launch.mesh import dp_size, make_production_mesh
+from repro.launch.sharding import param_specs, resolve
+from repro.models.transformer import (decode_step, init_caches, init_params,
+                                      prefill)
+from repro.optim.adamw import OptConfig, init_opt_state
+from repro.train.step import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+def _axes_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _pick_spec(shape, mesh, prefs) -> P:
+    """prefs: [(dim, logical_axis)] tried in order; a dim is sharded only if
+    divisible by the axis size and the axis is still unused."""
+    spec: list = [None] * len(shape)
+    used: set = set()
+    for dim, logical in prefs:
+        axes = resolve(logical, tuple(mesh.axis_names))
+        if axes is None:
+            continue
+        tup = axes if isinstance(axes, tuple) else (axes,)
+        if any(a in used for a in tup):
+            continue
+        if spec[dim] is not None:
+            continue
+        if shape[dim] % _axes_size(mesh, tup) == 0 and shape[dim] > 0:
+            spec[dim] = axes
+            used.update(tup)
+    return P(*spec)
+
+
+def _cache_shardings(cfg, caches_shape, mesh):
+    """NamedSharding tree for the stacked cache pytree (per pattern pos)."""
+    out = []
+    for (mixer, _), c in zip(cfg.pattern, caches_shape):
+        if mixer in ("attn", "xattn"):
+            # KVCache k/v: (R, B, S, KH, hd) — batch over dp; kv-heads over
+            # tp when divisible, else the sequence dim
+            sh = NamedSharding(mesh, _pick_spec(
+                c.k.shape, mesh, [(1, "dp"), (3, "tp"), (2, "tp")]))
+            out.append(type(c)(sh, sh))
+        else:
+            # MambaState h: (R, B, nh, hd, N); conv: (R, B, W-1, C)
+            h_sh = NamedSharding(mesh, _pick_spec(
+                c.h.shape, mesh, [(1, "dp"), (2, "tp")]))
+            conv_sh = NamedSharding(mesh, _pick_spec(
+                c.conv.shape, mesh, [(1, "dp"), (3, "tp")]))
+            out.append(type(c)(h_sh, conv_sh))
+    return out
+
+
+def _sanitize(spec: P, shape, mesh) -> P:
+    """Drop sharding on dims not divisible by the axis size (e.g. a 50280
+    vocab over 16-way dp falls back to replication on that dim)."""
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    new = []
+    for dim, ax in zip(shape, entries):
+        if ax is None or dim % _axes_size(mesh, ax) != 0:
+            new.append(None)
+        else:
+            new.append(ax)
+    return P(*new)
+
+
+def _batch_shardings(specs, mesh):
+    def one(leaf):
+        nd = len(leaf.shape)
+        if nd >= 2:
+            # (MB, per, ...) train or (B, ...) serve: shard the batch dim
+            dim = 1 if nd >= 3 or leaf.shape[0] > 1 else 0
+            dim = 1 if nd >= 3 else 0
+            return NamedSharding(mesh, _pick_spec(leaf.shape, mesh,
+                                                  [(dim, "dp")]))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, specs)
+
+
+def _opt_shardings(opt_shape, p_specs, mesh):
+    def build(tree, spec_tree):
+        out = {}
+        out["step"] = NamedSharding(mesh, P())
+        for k in ("m", "v", "err"):
+            if k in tree:
+                def one(leaf, sp):
+                    if isinstance(leaf, dict):  # int8 {q, s}: the last dim
+                        # is blocked, so q and s both gain ONE trailing dim;
+                        # re-sanitize (block counts may not divide the axis)
+                        base = P(*(tuple(sp) + (None,)))
+                        return {"q": NamedSharding(mesh, _sanitize(
+                                    base, leaf["q"].shape, mesh)),
+                                "s": NamedSharding(mesh, _sanitize(
+                                    base, leaf["s"].shape, mesh))}
+                    return NamedSharding(mesh, sp)
+                out[k] = jax.tree.map(
+                    one, tree[k], spec_tree,
+                    is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+        return out
+    return build(opt_shape, p_specs)
+
+
+# ---------------------------------------------------------------------------
+# cell runners
+# ---------------------------------------------------------------------------
+
+def _mem_info(compiled):
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+        out["per_chip_bytes"] = (out.get("argument_size_in_bytes", 0)
+                                 - out.get("alias_size_in_bytes", 0)
+                                 + out.get("output_size_in_bytes", 0)
+                                 + out.get("temp_size_in_bytes", 0))
+    except Exception as e:  # pragma: no cover
+        out["error"] = repr(e)
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             overrides: dict | None = None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **{k: v for k, v in overrides.items()
+                                          if hasattr(cfg, k)})
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "overrides": {k: str(v) for k, v in (overrides or {}).items()}}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    sp = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = dp_size(mesh)
+    mb_override = (overrides or {}).get("microbatches")
+    moment_dtype = (overrides or {}).get("moment_dtype", "float32")
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        p_shape = jax.eval_shape(lambda k: init_params(cfg, k), key)
+        p_specs = jax.tree.map(
+            lambda leaf, s: _sanitize(s, leaf.shape, mesh),
+            p_shape, param_specs(p_shape))
+        opt_specs = p_specs  # moments mirror the parameter layout
+        if (overrides or {}).get("no_fsdp"):
+            # ZeRO-1: parameters/grads replicated over dp (TP-sharded only);
+            # optimizer moments stay dp-sharded -> XLA derives the
+            # reduce-scatter(grad) / all-gather(update) pattern.
+            def _strip(s):
+                def drop(e):
+                    if e is None:
+                        return None
+                    tup = e if isinstance(e, tuple) else (e,)
+                    kept = tuple(a for a in tup if a not in ("data", "pod"))
+                    return kept if len(kept) > 1 else (
+                        kept[0] if kept else None)
+                return P(*(drop(e) for e in s))
+            p_specs = jax.tree.map(_strip, p_specs,
+                                   is_leaf=lambda s: isinstance(s, P))
+        p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                            is_leaf=lambda s: isinstance(s, P))
+
+        if sp.kind == "train":
+            mb = mb_override or min(sp.microbatches,
+                                    max(1, sp.global_batch // dp))
+            per = sp.global_batch // mb
+            specs = dict(input_specs(cfg, shape))
+            # re-derive microbatch layout for this mesh
+            def _resh(s):
+                return jax.ShapeDtypeStruct((mb, per) + s.shape[2:], s.dtype)
+            specs = {k: _resh(v) for k, v in specs.items()}
+            opt_cfg = OptConfig(moment_dtype=moment_dtype)
+            opt_shape = jax.eval_shape(
+                lambda: init_opt_state(p_shape, opt_cfg))
+            opt_sh = _opt_shardings(opt_shape, opt_specs, mesh)
+            batch_sh = _batch_shardings(specs, mesh)
+            step_fn = make_train_step(cfg, opt_cfg)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(p_sh, opt_sh, batch_sh),
+                             out_shardings=(p_sh, opt_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(p_shape, opt_shape, specs)
+            tokens = sp.global_batch * sp.seq_len
+            rec["microbatches"] = mb
+
+        elif sp.kind == "prefill":
+            specs = input_specs(cfg, shape)
+            batch_sh = _batch_shardings(specs, mesh)
+            cache_shape = jax.eval_shape(
+                lambda: init_caches(cfg, sp.global_batch, sp.seq_len,
+                                    cfg.n_image_tokens))
+            cache_sh = _cache_shardings(cfg, cache_shape, mesh)
+
+            def prefill_fn(params, tokens, image_embeds=None):
+                return prefill(cfg, params, tokens, max_seq=sp.seq_len,
+                               image_embeds=image_embeds)
+
+            in_sh = [p_sh, batch_sh["tokens"]]
+            args = [p_shape, specs["tokens"]]
+            if "image_embeds" in specs:
+                in_sh.append(batch_sh["image_embeds"])
+                args.append(specs["image_embeds"])
+            jitted = jax.jit(prefill_fn, in_shardings=tuple(in_sh),
+                             out_shardings=(None, cache_sh))
+            lowered = jitted.lower(*args)
+            tokens = sp.global_batch * sp.seq_len
+
+        else:  # decode
+            specs = input_specs(cfg, shape)
+            cache_shape = jax.eval_shape(
+                lambda: init_caches(cfg, sp.global_batch, sp.seq_len,
+                                    cfg.n_image_tokens))
+            cache_sh = _cache_shardings(cfg, cache_shape, mesh)
+            tok_sh = NamedSharding(
+                mesh, _pick_spec(specs["token"].shape, mesh, [(0, "dp")]))
+
+            def serve_fn(params, caches, token, pos):
+                return decode_step(cfg, params, caches, token, pos)
+
+            jitted = jax.jit(serve_fn,
+                             in_shardings=(p_sh, cache_sh, tok_sh,
+                                           NamedSharding(mesh, P())),
+                             out_shardings=(None, cache_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(p_shape, cache_shape, specs["token"],
+                                   specs["pos"])
+            tokens = sp.global_batch  # one new token per sequence
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    mem = _mem_info(compiled)
+    coll = roofline.collective_bytes(compiled.as_text())
+    n_chips = mesh.devices.size
+    mf = roofline.model_flops_for(cfg, sp.kind, tokens)
+    an = roofline.analytic_cost(cfg, sp.kind, sp.global_batch, sp.seq_len,
+                                n_chips)
+    # compute/memory terms from the analytic model (cost_analysis counts
+    # scan bodies once — kept in the record as a cross-check only);
+    # collective bytes from the trip-corrected HLO parse.
+    coll_total = sum(v for k, v in coll.items() if not k.startswith("_"))
+    terms = roofline.RooflineTerms(
+        compute_s=an["flops_per_chip"] / roofline.PEAK_FLOPS,
+        memory_s=an["hbm_bytes_per_chip"] / roofline.HBM_BW,
+        collective_s=coll_total / roofline.LINK_BW,
+        flops_per_chip=an["flops_per_chip"],
+        hbm_bytes_per_chip=an["hbm_bytes_per_chip"],
+        collective_bytes_per_chip=coll_total,
+        bytes_per_chip=mem.get("per_chip_bytes", 0),
+        model_flops=mf,
+        useful_flops_frac=(mf / (an["flops_per_chip"] * n_chips)
+                           if an["flops_per_chip"] else 0.0),
+    )
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        tokens=tokens,
+        cost={k: float(v) for k, v in cost.items()
+              if isinstance(v, (int, float))},
+        memory=mem,
+        collectives={k: v for k, v in coll.items()},
+        roofline=dataclasses.asdict(terms),
+        dominant=terms.dominant,
+        roofline_frac=round(terms.roofline_frac, 4),
+        fits_v5e=mem.get("per_chip_bytes", 0) <= roofline.HBM_CAP_V5E,
+        fits_v5p=mem.get("per_chip_bytes", 0) <= roofline.HBM_CAP_V5P,
+        n_params=cfg.param_count(),
+        n_active_params=cfg.active_param_count(),
+    )
+    if verbose:
+        print(f"[dryrun] {arch} × {shape} × {rec['mesh']}: "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s "
+              f"dominant={terms.dominant} "
+              f"bytes/chip={mem.get('per_chip_bytes', 0)/2**30:.2f}GiB")
+        print("  memory_analysis:", {k: v for k, v in mem.items()})
+        print("  cost_analysis: flops/chip=%.3e bytes/chip=%.3e" %
+              (terms.flops_per_chip, terms.hbm_bytes_per_chip))
+        print("  collectives:", coll.get("_counts"))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--no-dedup-embed", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="ZeRO-1: params TP-only, moments dp-sharded")
+    ap.add_argument("--moe-groups", type=int, default=0,
+                    help="grouped (dp-local) MoE dispatch")
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-parallel block boundaries")
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--attn-chunk", type=int, default=0)
+    ap.add_argument("--loss-chunk", type=int, default=0)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    overrides: dict = {}
+    if args.no_dedup_embed:
+        overrides["dedup_embed"] = False
+    if args.no_fsdp:
+        overrides["no_fsdp"] = True
+    if args.moe_groups:
+        overrides["moe_groups"] = args.moe_groups
+    if args.sp:
+        overrides["sp"] = True
+    if args.moment_dtype != "float32":
+        overrides["moment_dtype"] = args.moment_dtype
+    if args.microbatches:
+        overrides["microbatches"] = args.microbatches
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.attn_chunk:
+        overrides["attn_chunk"] = args.attn_chunk
+    if args.loss_chunk:
+        overrides["loss_chunk"] = args.loss_chunk
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"__{args.tag}" if args.tag else ""
+                fn = os.path.join(
+                    args.out,
+                    f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}{tag}.json")
+                if args.skip_existing and os.path.exists(fn):
+                    print(f"[dryrun] skip existing {fn}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mp, overrides or None)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    failures += 1
+                    print(f"[dryrun] FAIL {arch} × {shape}: {e!r}")
+                with open(fn, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"[dryrun] done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Elastic scaling: reshard a checkpoint onto a different mesh.
+
+Node failure / capacity change at scale means restarting on a different
+device count.  Checkpoints are mesh-agnostic (full logical arrays), so
+recovery = rebuild shardings against the new mesh and ``device_put`` each
+leaf; the sharding rules (launch/sharding.py) re-derive the layout for
+whatever axes the new mesh has.  Combined with the trainer's auto-resume,
+this is the restart path after shrinking 512 → 256 chips (or growing).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.sharding import param_specs
+
+
+def _axes_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _sanitize(spec: P, shape, mesh) -> P:
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    return P(*(None if a is None or d % _axes_size(mesh, a) else a
+               for d, a in zip(shape, entries)))
+
+
+def reshard_params(params, new_mesh: jax.sharding.Mesh):
+    """Place a (restored) params pytree onto a new mesh per the rules."""
+    with jax.set_mesh(new_mesh):
+        specs = jax.tree.map(
+            lambda leaf, s: _sanitize(s, leaf.shape, new_mesh),
+            params, param_specs(params))
+    return jax.tree.map(
+        lambda leaf, s: jax.device_put(leaf, NamedSharding(new_mesh, s)),
+        params, specs)
+
+
+def reshard_opt_state(opt_state, params_resharded):
+    """Moments mirror the parameter shardings (f32 moments)."""
+    def like(leaf, p):
+        return jax.device_put(leaf, p.sharding)
+    out = dict(opt_state)
+    for k in ("m", "v", "err"):
+        if k in out and not _has_quantized(out[k]):
+            out[k] = jax.tree.map(like, out[k], params_resharded)
+    return out
+
+
+def _has_quantized(tree) -> bool:
+    return any(isinstance(x, dict) and "q" in x
+               for x in jax.tree.leaves(
+                   tree, is_leaf=lambda x: isinstance(x, dict) and "q" in x))

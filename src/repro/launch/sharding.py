@@ -1,0 +1,122 @@
+"""Logical-axis sharding rules (FSDP over data/pod, TP/EP over model).
+
+Logical axes used throughout the framework:
+  * "dp"  — batch/FSDP axis: resolves to ("pod", "data") when the mesh has a
+            pod axis, else ("data",).
+  * "tp"  — tensor/expert-parallel axis: resolves to "model".
+
+``constrain(x, ...)`` is a no-op outside a mesh context (CPU smoke tests see
+one device and no mesh), so model code can annotate unconditionally.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _mesh_axes() -> tuple[str, ...]:
+    m = jax.sharding.get_abstract_mesh()
+    return tuple(m.axis_names) if (m is not None and not m.empty) else ()
+
+
+def resolve(logical: Any, mesh_axes: tuple[str, ...]) -> Any:
+    """logical axis name(s) -> concrete mesh axis name(s) (or None)."""
+    if logical is None:
+        return None
+    if isinstance(logical, (tuple, list)):
+        out: list[str] = []
+        for item in logical:
+            r = resolve(item, mesh_axes)
+            if r is None:
+                continue
+            out.extend(r if isinstance(r, tuple) else (r,))
+        return tuple(out) if out else None
+    if logical == "dp":
+        axes = tuple(a for a in ("pod", "data") if a in mesh_axes)
+        return axes if axes else None
+    if logical == "tp":
+        return "model" if "model" in mesh_axes else None
+    # already a concrete axis name
+    return logical if logical in mesh_axes else None
+
+
+def spec(*logical_axes) -> P:
+    """Build a PartitionSpec against the currently active mesh."""
+    axes = _mesh_axes()
+    return P(*(resolve(a, axes) for a in logical_axes))
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    """with_sharding_constraint against the active mesh; no-op without one."""
+    if not _mesh_axes():
+        return x
+    return jax.lax.with_sharding_constraint(x, spec(*logical_axes))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules: path-regex -> logical axes per dim.
+# Parameters inside scanned blocks carry a leading repeats dim (None).
+# ---------------------------------------------------------------------------
+PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings: vocab over dp (FSDP), d_model over tp
+    (r"embed/tokens$",        ("dp", "tp")),
+    (r"lm_head$",             (None, "tp")),          # (D, V) vocab-parallel
+    # attention projections (R, D, H*hd) / (R, H*hd, D)
+    (r"mixer/w[qkv]$",        (None, "dp", "tp")),
+    (r"mixer/wo$",            (None, "tp", "dp")),
+    (r"mixer/[qk]_norm$",     (None, None)),
+    # dense FFN
+    (r"ffn/w_(in|gate)$",     (None, "dp", "tp")),
+    (r"ffn/w_out$",           (None, "tp", "dp")),
+    # MoE: experts over tp (EP), d_model over dp (FSDP)
+    (r"ffn/router$",          (None, "dp", None)),
+    (r"ffn/experts_w_(in|gate)$", (None, "tp", "dp", None)),
+    (r"ffn/experts_w_out$",   (None, "tp", None, "dp")),
+    # Mamba2 SSD
+    (r"mixer/in_proj$",       (None, "dp", "tp")),
+    (r"mixer/out_proj$",      (None, "tp", "dp")),
+    (r"mixer/conv_w$",        (None, None, "tp")),
+    (r"mixer/(A_log|D_skip|dt_bias)$", (None, "tp")),
+    (r"mixer/ssm_norm$",      (None, "tp")),
+    # norm gains (stacked): replicated
+    (r"ln[12]$",              (None, None)),
+    (r"final_norm$",          (None,)),
+]
+
+
+def param_spec_for(path: str, ndim: int) -> P:
+    """Look up the sharding rule for a parameter path ('a/b/c')."""
+    axes = _mesh_axes()
+    for pat, logical in PARAM_RULES:
+        if re.search(pat, path):
+            lg = logical[-ndim:] if len(logical) >= ndim else (
+                (None,) * (ndim - len(logical)) + tuple(logical))
+            return P(*(resolve(a, axes) for a in lg))
+    return P()  # replicate by default
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params) -> Any:
+    """PartitionSpec pytree matching a params pytree (active mesh)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec_for(_path_str(path), leaf.ndim), params)
+
+
+def named_shardings(mesh: jax.sharding.Mesh, tree_of_specs) -> Any:
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,53 @@
+"""Training launcher: --arch <id> on a host mesh (or production dry-mesh).
+
+Real-cluster usage (per-host invocation under jax.distributed) follows the
+same path: make mesh -> shard state -> Trainer.run() with auto-resume.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+      --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, smoke
+from repro.optim.adamw import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "host2x2"])
+    args = ap.parse_args()
+
+    cfg = smoke(args.arch) if args.smoke else get_config(args.arch)
+    mesh = None
+    if args.mesh == "host2x2":
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+    opt = OptConfig(lr=args.lr, warmup_steps=max(2, args.steps // 20),
+                    total_steps=args.steps, moment_dtype=args.moment_dtype)
+    tc = TrainerConfig(steps=args.steps, global_batch=args.batch,
+                       microbatches=args.microbatches, seq_len=args.seq,
+                       ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+    res = Trainer(cfg, opt, tc, mesh=mesh).run()
+    print(f"[train] done; final loss {res['losses'][-1]:.4f}; "
+          f"stragglers {res['straggler_events']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model zoo: composable pattern-block decoders (dense/MoE/SSM/hybrid/VLM)."""
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+from repro.models.transformer import (decode_step, forward, init_caches,
+                                      init_params, loss_fn, prefill)
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "decode_step", "forward",
+           "init_caches", "init_params", "loss_fn", "prefill"]

@@ -1,0 +1,169 @@
+"""GQA attention: blockwise (flash-equivalent) training path + cached decode.
+
+The training/prefill path streams KV in chunks with an online-softmax
+accumulator (lax.scan), so peak memory is O(S · chunk) instead of O(S²) —
+required for the 32k-prefill shapes and the TPU-native substitute for a
+flash kernel (XLA fuses the inner block einsums onto the MXU).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm, rope
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array   # (D, H*hd)
+    wk: jax.Array   # (D, KH*hd)
+    wv: jax.Array   # (D, KH*hd)
+    wo: jax.Array   # (H*hd, D)
+    q_norm: jax.Array  # (hd,) — used when cfg.qk_norm
+    k_norm: jax.Array  # (hd,)
+
+
+def init_attn(key, cfg: ModelConfig, dtype) -> AttnParams:
+    from repro.models.layers import dense_init
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return AttnParams(
+        wq=dense_init(ks[0], (cfg.d_model, cfg.n_heads * hd), dtype),
+        wk=dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads * hd), dtype),
+        wv=dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads * hd), dtype),
+        wo=dense_init(ks[3], (cfg.n_heads * hd, cfg.d_model), dtype),
+        q_norm=jnp.zeros((hd,), dtype),
+        k_norm=jnp.zeros((hd,), dtype),
+    )
+
+
+def _project_qkv(p: AttnParams, cfg: ModelConfig, x, positions,
+                 kv_x=None, use_rope=True):
+    """Returns q: (B,S,H,hd), k/v: (B,Skv,KH,hd)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    kv_in = x if kv_x is None else kv_x
+    q = (x @ p.wq).reshape(b, s, cfg.n_heads, hd)
+    k = (kv_in @ p.wk).reshape(b, kv_in.shape[1], cfg.n_kv_heads, hd)
+    v = (kv_in @ p.wv).reshape(b, kv_in.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p.q_norm, cfg.norm_eps)
+        k = rms_norm(k, p.k_norm, cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        kv_pos = positions if kv_x is None else jnp.arange(kv_in.shape[1])[None]
+        k = rope(k, kv_pos, cfg.rope_theta)
+    return q, k, v
+
+
+def blockwise_attention(q, k, v, *, causal: bool, chunk: int,
+                        q_offset=0) -> jax.Array:
+    """Online-softmax attention over KV chunks.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KH, hd); GQA via head grouping.
+    ``q_offset`` is the absolute position of q[0] for causal masking.
+    """
+    b, sq, h, hd = q.shape
+    skv_real, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+    chunk = min(chunk, skv_real)
+    pad = (-skv_real) % chunk
+    if pad:  # ragged KV (e.g. 1601 image tokens): pad + mask
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    skv = skv_real + pad
+    n_chunks = skv // chunk
+    kc = k.reshape(b, n_chunks, chunk, kh, hd)
+    vc = v.reshape(b, n_chunks, chunk, kh, hd)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kb, vb, c_idx = inputs
+        kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+        s_ = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb) * scale
+        kv_pos = c_idx * chunk + jnp.arange(chunk)
+        mask = jnp.broadcast_to(kv_pos[None, :] < skv_real,  # padded tail
+                                (sq, chunk))
+        if causal:
+            mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+        s_ = jnp.where(mask[None, :, None, None, :], s_, NEG_INF)
+        m_new = jnp.maximum(m, s_.max(axis=-1))
+        p_ = jnp.exp(s_ - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p_.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p_, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kh, g), jnp.float32)
+    acc0 = jnp.zeros((b, sq, kh, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def self_attention(p: AttnParams, cfg: ModelConfig, x, positions) -> jax.Array:
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    o = blockwise_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    b, s = x.shape[:2]
+    return o.reshape(b, s, -1) @ p.wo
+
+
+def cross_attention(p: AttnParams, cfg: ModelConfig, x, kv_x) -> jax.Array:
+    """VLM cross-attn: queries from text stream, KV from image embeddings."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, jnp.arange(s)[None], kv_x=kv_x,
+                           use_rope=False)
+    o = blockwise_attention(q, k, v, causal=False,
+                            chunk=min(cfg.attn_chunk, kv_x.shape[1]))
+    return o.reshape(b, s, -1) @ p.wo
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, KH, hd)
+    v: jax.Array  # (B, S_max, KH, hd)
+
+
+def init_kv_cache(batch, max_seq, cfg: ModelConfig, dtype) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_seq, cfg.n_kv_heads, hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def decode_attention(p: AttnParams, cfg: ModelConfig, x, cache: KVCache,
+                     pos) -> tuple[jax.Array, KVCache]:
+    """One-token decode: append to cache, attend over the valid prefix.
+
+    x: (B, 1, D); pos: () int32 — current position.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, pos, 0, 0))
+    s_max = k.shape[1]
+    hd = cfg.resolved_head_dim
+    kh = cfg.n_kv_heads
+    g = cfg.n_heads // kh
+    qg = q.reshape(b, kh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg,
+                        k.astype(jnp.float32)) * hd ** -0.5
+    valid = jnp.arange(s_max)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    o = o.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype)
+    return o @ p.wo, KVCache(k, v)

@@ -1,0 +1,67 @@
+"""Embedding lookup with JSPIM dedup-gather.
+
+Natural-language token streams are Zipf-skewed — exactly the probe-key
+distribution the paper's coalescing window exploits.  ``embed_tokens`` with
+``dedup=True`` coalesces the per-batch token stream (fixed-shape unique),
+gathers only the distinct rows, and scatters results back through the
+inverse permutation (the duplication-list inverse).
+
+Under the production mesh the table is sharded (vocab over "dp", d_model
+over "tp"), so the vocab-parallel gather's cross-shard combine shrinks from
+(B·S, D) to (U, D), U = distinct tokens — the LM analogue of "repeated fact
+keys cost one row activation".  The win is visible in the dry-run collective
+bytes (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dedup import coalesce
+from repro.launch.sharding import constrain
+
+
+def embed_tokens(table: jax.Array, ids: jax.Array, *, dedup: bool = True,
+                 unique_capacity: int | None = None) -> jax.Array:
+    """table: (V, D); ids: (B, S) -> (B, S, D)."""
+    v, d = table.shape
+    b, s = ids.shape
+    if not dedup:
+        out = table[ids]
+        return constrain(out, "dp", None, "tp")
+    n = b * s
+    cap = unique_capacity or min(v, n)
+    co = coalesce(ids.reshape(-1), cap, pad=0)
+    rows = table[jnp.clip(co.unique, 0, v - 1)]         # (U, D) gather
+    rows = constrain(rows, None, "tp")
+    # overflowed coalesce (cap < distinct) falls back to direct gather of
+    # the tail; with cap = min(V, B*S) overflow is impossible.
+    out = rows[co.inverse].reshape(b, s, d)
+    return constrain(out, "dp", None, "tp")
+
+
+def lm_head_loss_chunked(h: jax.Array, w: jax.Array, labels: jax.Array,
+                         chunk: int) -> jax.Array:
+    """Mean cross-entropy with sequence-chunked logits.
+
+    h: (B, S, D); w: (D, V); labels: (B, S) — logits (B, chunk, V) are
+    materialized one chunk at a time (vocab-parallel under the mesh).
+    """
+    b, s, d = h.shape
+    v = w.shape[1]
+    chunk = min(chunk, s)
+    while s % chunk:  # largest divisor <= requested chunk
+        chunk -= 1
+    nc = s // chunk
+    hc = h.reshape(b, nc, chunk, d).swapaxes(0, 1)      # (nc, B, chunk, D)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def step(carry, inp):
+        hk, lk = inp
+        logits = (hk @ w).astype(jnp.float32)           # (B, chunk, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lk[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(step, jnp.float32(0.0), (hc, lc))
+    return total / (b * s)

@@ -1,0 +1,365 @@
+"""Mixture-of-Experts with JSPIM-style binned dispatch.
+
+Token→expert routing is a skewed join: expert ids are the keys, hot experts
+are hot keys.  Dispatch therefore reuses the JSPIM probe schedule — sort the
+assignment stream by expert ("bucket") id, segment into fixed-capacity expert
+buffers ("bucket rows"), process every bucket with dense batched matmuls, and
+scatter results back through the inverse permutation (the duplication-list
+inverse).  Capacity overflow = bucket overflow: dropped assignments fall back
+to the residual path, keeping latency flat under routing skew — the MoE
+analogue of the paper's skew-insensitive O(1) lookups.
+
+Expert tensors are sharded over the "tp" mesh axis (expert parallelism); the
+(E, C, D) dispatch buffer is constrained likewise so XLA emits the dispatch /
+combine all-to-alls over that axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.layers import dense_init
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array          # (D, E)
+    experts_w_in: jax.Array    # (E, D, F)
+    experts_w_gate: jax.Array  # (E, D, F)
+    experts_w_out: jax.Array   # (E, F, D)
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> MoEParams:
+    mc = cfg.moe
+    ks = jax.random.split(key, 4)
+    e, d, f = mc.num_experts, cfg.d_model, mc.d_ff_expert
+    return MoEParams(
+        router=dense_init(ks[0], (d, e), jnp.float32),
+        experts_w_in=dense_init(ks[1], (e, d, f), dtype),
+        experts_w_gate=dense_init(ks[2], (e, d, f), dtype),
+        experts_w_out=dense_init(ks[3], (e, f, d), dtype),
+    )
+
+
+def _capacity(n_tokens: int, mc: MoEConfig) -> int:
+    c = int(n_tokens * mc.top_k * mc.capacity_factor / mc.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to sublane multiple
+
+
+def moe_ffn(p: MoEParams, cfg: ModelConfig, x: jax.Array,
+            act: str = "swiglu") -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).  Fixed-shape binned dispatch.
+
+    With ``cfg.moe_groups > 1`` the dispatch runs **grouped**: the token
+    stream is split into G groups whose leading axis is constrained to the
+    "dp" mesh axes, so the sort / bucket-scatter / inverse-gather stay
+    *local to each data shard* and the only cross-device traffic is the
+    (G, E, C, D) expert buffer all-to-all — the hierarchical version of the
+    JSPIM probe schedule (per-rank coalescing before the shared search).
+    Capacity is enforced per group (a narrower coalescing window: slightly
+    more overflow drops under extreme skew, orders less data movement).
+    """
+    g = getattr(cfg, "moe_groups", 1)
+    if g > 1:
+        return _moe_ffn_grouped(p, cfg, x, act, g)
+    mc = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    k = mc.top_k
+    xf = x.reshape(n, d)
+
+    logits = xf.astype(jnp.float32) @ p.router          # (n, E)
+    topv, topi = jax.lax.top_k(logits, k)               # (n, k)
+    gates = jax.nn.softmax(topv, axis=-1)               # (n, k)
+
+    # ---- JSPIM binned dispatch: sort assignments by expert id ----------
+    flat_e = topi.reshape(-1)                           # (n*k,) bucket ids
+    flat_t = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)            # the binning pass
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    start = jnp.searchsorted(se, jnp.arange(mc.num_experts)).astype(jnp.int32)
+    pos = jnp.arange(n * k, dtype=jnp.int32) - start[se]
+    cap = _capacity(n, mc)
+    keep = pos < cap                                    # bucket overflow drop
+    slot = jnp.where(keep, se * cap + pos, mc.num_experts * cap)
+
+    buf = jnp.zeros((mc.num_experts * cap, d), x.dtype)
+    buf = buf.at[slot].set(jnp.where(keep[:, None], xf[st], 0), mode="drop")
+    buf = buf.reshape(mc.num_experts, cap, d)
+    buf = constrain(buf, "tp", None, None)              # EP all-to-all
+
+    # ---- per-expert GLU FFN (dense batched matmuls on the MXU) ---------
+    h = jnp.einsum("ecd,edf->ecf", buf, p.experts_w_in)
+    g = jnp.einsum("ecd,edf->ecf", buf, p.experts_w_gate)
+    g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+    out = jnp.einsum("ecf,efd->ecd", h * g, p.experts_w_out)
+    out = constrain(out, "tp", None, None)
+
+    # ---- combine: inverse permutation + gate weighting ------------------
+    vals = out.reshape(mc.num_experts * cap, d)[jnp.minimum(
+        slot, mc.num_experts * cap - 1)]
+    vals = jnp.where(keep[:, None], vals, 0) * sg[:, None].astype(x.dtype)
+    y = jnp.zeros((n, d), x.dtype).at[st].add(vals)
+    return y.reshape(b, s, d)
+
+
+def _dp_axes() -> tuple[str, ...]:
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or m.empty:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in m.axis_names)
+
+
+def _moe_ffn_grouped(p: MoEParams, cfg: ModelConfig, x: jax.Array,
+                     act: str, groups: int) -> jax.Array:
+    """Grouped binned dispatch (see moe_ffn docstring).
+
+    Under a mesh, dispatch & combine run inside ``jax.shard_map`` manual
+    over the dp axes — the sort/bucket-scatter/inverse-gather are dp-local
+    *by construction* (GSPMD otherwise partitions the batched scatter by
+    replicate+mask+all-reduce, which was the dominant collective in the
+    baseline kimi cell; see EXPERIMENTS.md §Perf).  The expert einsums stay
+    in SPMD-land so the (G,E,C,D) buffer keeps its EP all-to-all over "tp".
+    """
+    mc = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    assert n % groups == 0, (n, groups)
+    ng = n // groups
+    k = mc.top_k
+    xg = constrain(x.reshape(groups, ng, d), "dp", None, None)
+
+    logits = xg.astype(jnp.float32) @ p.router           # (G, ng, E)
+    topv, topi = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(topv, axis=-1)
+
+    cap = max(8, -(-int(ng * k * mc.capacity_factor / mc.num_experts)
+                   ) // 8 * 8)
+
+    def dispatch_one(xl, el, gl):
+        """Per-group: local sort / bucket / gather (no cross-shard refs)."""
+        flat_e = el.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(ng, dtype=jnp.int32), k)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sg = flat_e[order], flat_t[order], gl.reshape(-1)[order]
+        start = jnp.searchsorted(se, jnp.arange(mc.num_experts)
+                                 ).astype(jnp.int32)
+        pos = jnp.arange(ng * k, dtype=jnp.int32) - start[se]
+        keep = pos < cap
+        slot = jnp.where(keep, se * cap + pos, mc.num_experts * cap)
+        buf = jnp.zeros((mc.num_experts * cap, d), x.dtype)
+        buf = buf.at[slot].set(jnp.where(keep[:, None], xl[st], 0),
+                               mode="drop")
+        return buf.reshape(mc.num_experts, cap, d), slot, keep, sg, st
+
+    def combine_one(ob, slot, keep, sg, st):
+        vals = ob.reshape(mc.num_experts * cap, d)[
+            jnp.minimum(slot, mc.num_experts * cap - 1)]
+        vals = jnp.where(keep[:, None], vals, 0) * sg[:, None].astype(x.dtype)
+        return jnp.zeros((ng, d), x.dtype).at[st].add(vals)
+
+    def gather_back_one(ob, slot, keep, st):
+        """Transpose of dispatch_one's scatter: token-cotangent gather."""
+        vals = ob.reshape(mc.num_experts * cap, d)[
+            jnp.minimum(slot, mc.num_experts * cap - 1)]
+        vals = jnp.where(keep[:, None], vals, 0)
+        return jnp.zeros((ng, d), ob.dtype).at[st].add(vals)
+
+    def scatter_fwd_one(dy, slot, keep, sg, st):
+        """Transpose of combine_one's gather: buf-cotangent scatter."""
+        upd = dy[st] * sg[:, None].astype(dy.dtype)
+        upd = jnp.where(keep[:, None], upd, 0)
+        buf = jnp.zeros((mc.num_experts * cap, d), dy.dtype)
+        return buf.at[slot].set(upd, mode="drop").reshape(
+            mc.num_experts, cap, d)
+
+    dp = _dp_axes()
+    mesh = jax.sharding.get_abstract_mesh()
+    has_model = bool(dp) and "model" in mesh.axis_names
+    tp_size = mesh.shape["model"] if has_model else 1
+
+    if dp and mc.num_experts % tp_size == 0:
+        return _grouped_manual(p, cfg, x, act, groups, xg, gates, topi,
+                               cap, ng, k, dp, tp_size)
+    buf, slot, keep, sg, st = jax.vmap(dispatch_one)(xg, topi, gates)
+    buf = constrain(buf, "dp", "tp", None, None)         # EP all-to-all
+
+    h = jnp.einsum("gecd,edf->gecf", buf, p.experts_w_in)
+    gg = jnp.einsum("gecd,edf->gecf", buf, p.experts_w_gate)
+    gg = jax.nn.silu(gg) if act == "swiglu" else jax.nn.gelu(gg)
+    out = jnp.einsum("gecf,efd->gecd", h * gg, p.experts_w_out)
+    out = constrain(out, "dp", "tp", None, None)
+    y = jax.vmap(combine_one)(out, slot, keep, sg, st)
+    y = constrain(y, "dp", None, None)
+    return y.reshape(b, s, d)
+
+
+def _grouped_manual(p, cfg, x, act, groups, xg, gates, topi, cap, ng, k,
+                    dp, tp_size):
+    """Expert-sharded manual dispatch: each (dp, tp) device builds only ITS
+    experts' buckets from its (tp-replicated) token block, so dispatch is
+    collective-free; combine psums partial outputs over "model" — the only
+    cross-device traffic besides the FSDP weight stream.  custom_vjp keeps
+    the backward inside manual regions (the transpose of a bucket scatter
+    is a bucket gather)."""
+    from jax.sharding import PartitionSpec as P
+    mc = cfg.moe
+    b, s, d = x.shape
+    mesh = jax.sharding.get_abstract_mesh()
+    has_model = "model" in mesh.axis_names
+    e_local = mc.num_experts // tp_size
+    axes = set(dp) | ({"model"} if has_model else set())
+    GS, X3 = P(dp, None), P(dp, None, None)
+    BUF = P(dp, "model" if has_model else None, None, None)
+
+    def _manual(fn, in_specs, out_specs):
+        return jax.shard_map(jax.vmap(fn), mesh=mesh, axis_names=axes,
+                             check_vma=False, in_specs=in_specs,
+                             out_specs=out_specs)
+
+    def _e0():
+        return (jax.lax.axis_index("model") * e_local if has_model
+                else jnp.int32(0))
+
+    def _local(se, pos):
+        e0 = _e0()
+        ok = (se >= e0) & (se < e0 + e_local) & (pos < cap)
+        lslot = jnp.where(ok, (se - e0) * cap + pos, e_local * cap)
+        return ok, lslot
+
+    # ---- routing metadata (integer sort, redundant across tp) -----------
+    def route_one(el, gl):
+        flat_e = el.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(ng, dtype=jnp.int32), k)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st = flat_e[order], flat_t[order]
+        sg = gl.reshape(-1)[order]
+        start = jnp.searchsorted(se, jnp.arange(mc.num_experts)
+                                 ).astype(jnp.int32)
+        pos = jnp.arange(ng * k, dtype=jnp.int32) - start[se]
+        return se, pos, sg, st
+
+    se, pos, _, st = _manual(route_one, (X3, X3), (GS, GS, GS, GS))(
+        topi, jax.lax.stop_gradient(gates))
+    # differentiable gate stream in the same sorted order
+    sg = jnp.take_along_axis(
+        gates.reshape(groups, -1),
+        jnp.argsort(topi.reshape(groups, -1), axis=-1, stable=True), axis=-1)
+
+    # ---- dispatch (custom_vjp; bwd = expert-local gather + psum) --------
+    def disp_one(xl, se_, pos_, st_):
+        ok, lslot = _local(se_, pos_)
+        buf = jnp.zeros((e_local * cap, d), x.dtype)
+        buf = buf.at[lslot].set(jnp.where(ok[:, None], xl[st_], 0),
+                                mode="drop")
+        return buf.reshape(e_local, cap, d)
+
+    def dgather_one(ob, se_, pos_, st_):
+        ok, lslot = _local(se_, pos_)
+        vals = ob.reshape(e_local * cap, d)[
+            jnp.minimum(lslot, e_local * cap - 1)]
+        vals = jnp.where(ok[:, None], vals, 0)
+        dx = jnp.zeros((ng, d), ob.dtype).at[st_].add(vals)
+        return jax.lax.psum(dx, "model") if has_model else dx
+
+    @jax.custom_vjp
+    def dispatch(xg_, se_, pos_, st_):
+        return _manual(disp_one, (X3, GS, GS, GS), BUF)(xg_, se_, pos_, st_)
+
+    dispatch.defvjp(
+        lambda xg_, se_, pos_, st_: (dispatch(xg_, se_, pos_, st_),
+                                     (se_, pos_, st_)),
+        lambda res, dbuf: (_manual(dgather_one, (BUF, GS, GS, GS), X3)(
+            dbuf.astype(x.dtype), *res), None, None, None))
+
+    # ---- combine (custom_vjp; fwd psums partials over "model") ----------
+    def comb_one(ob, se_, pos_, sg_, st_):
+        ok, lslot = _local(se_, pos_)
+        vals = ob.reshape(e_local * cap, d)[
+            jnp.minimum(lslot, e_local * cap - 1)]
+        vals = jnp.where(ok[:, None], vals, 0) * sg_[:, None].astype(x.dtype)
+        y = jnp.zeros((ng, d), x.dtype).at[st_].add(vals)
+        return jax.lax.psum(y, "model") if has_model else y
+
+    def dscatter_one(dy, se_, pos_, sg_, st_):
+        ok, lslot = _local(se_, pos_)
+        upd = dy[st_] * sg_[:, None].astype(dy.dtype)
+        upd = jnp.where(ok[:, None], upd, 0)
+        buf = jnp.zeros((e_local * cap, d), dy.dtype)
+        return buf.at[lslot].set(upd, mode="drop").reshape(e_local, cap, d)
+
+    def dsg_one(ob, dy, se_, pos_, st_):
+        ok, lslot = _local(se_, pos_)
+        vals = ob.reshape(e_local * cap, d)[
+            jnp.minimum(lslot, e_local * cap - 1)]
+        g_ = jnp.sum(vals.astype(jnp.float32) * dy[st_].astype(jnp.float32),
+                     axis=-1)
+        g_ = jnp.where(ok, g_, 0.0)
+        return jax.lax.psum(g_, "model") if has_model else g_
+
+    @jax.custom_vjp
+    def combine(out_, sg_, se_, pos_, st_):
+        return _manual(comb_one, (BUF, GS, GS, GS, GS), X3)(
+            out_, se_, pos_, sg_, st_)
+
+    def combine_fwd(out_, sg_, se_, pos_, st_):
+        return combine(out_, sg_, se_, pos_, st_), (out_, sg_, se_, pos_, st_)
+
+    def combine_bwd(res, dy):
+        out_, sg_, se_, pos_, st_ = res
+        dout = _manual(dscatter_one, (X3, GS, GS, GS, GS), BUF)(
+            dy, se_, pos_, sg_, st_)
+        dsg = _manual(dsg_one, (BUF, X3, GS, GS, GS), GS)(
+            out_, dy, se_, pos_, st_)
+        return dout.astype(out_.dtype), dsg, None, None, None
+
+    combine.defvjp(combine_fwd, combine_bwd)
+
+    buf = dispatch(xg, se, pos, st)
+    buf = constrain(buf, "dp", "tp", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", buf, p.experts_w_in)
+    gg = jnp.einsum("gecd,edf->gecf", buf, p.experts_w_gate)
+    gg = jax.nn.silu(gg) if act == "swiglu" else jax.nn.gelu(gg)
+    out = jnp.einsum("gecf,efd->gecd", h * gg, p.experts_w_out)
+    out = constrain(out, "dp", "tp", None, None)
+
+    y = combine(out, sg, se, pos, st)
+    y = constrain(y, "dp", None, None)
+    return y.reshape(b, s, d)
+
+
+def moe_ffn_dense_fallback(p: MoEParams, cfg: ModelConfig, x: jax.Array,
+                           act: str = "swiglu") -> jax.Array:
+    """Reference dispatch: dense one-hot masking (no binning).  O(n·E) —
+    used as the oracle for the binned path and as the un-optimized baseline
+    in the perf log."""
+    mc = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    xf = x.reshape(n, d)
+    logits = xf.astype(jnp.float32) @ p.router
+    topv, topi = jax.lax.top_k(logits, mc.top_k)
+    gates = jax.nn.softmax(topv, axis=-1)
+    y = jnp.zeros((n, d), jnp.float32)
+    for e in range(mc.num_experts):
+        w = ((topi == e) * gates).sum(axis=-1)          # (n,)
+        h = xf @ p.experts_w_in[e]
+        g = xf @ p.experts_w_gate[e]
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        o = (h * g) @ p.experts_w_out[e]
+        y = y + w[:, None] * o.astype(jnp.float32)
+    return y.astype(x.dtype).reshape(b, s, d)
+
+
+def routing_skew_stats(logits: jax.Array, top_k: int) -> dict:
+    """Expert load imbalance (the skew JSPIM-style dispatch absorbs)."""
+    _, topi = jax.lax.top_k(logits, top_k)
+    counts = jnp.bincount(topi.reshape(-1), length=logits.shape[-1])
+    mean = counts.mean()
+    return {"max_over_mean": counts.max() / jnp.maximum(mean, 1),
+            "frac_empty": (counts == 0).mean()}

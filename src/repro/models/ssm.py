@@ -1,0 +1,171 @@
+"""Mamba2 SSD (state-space duality) block — chunked scan, arXiv:2405.21060.
+
+Training/prefill: sequence split into chunks; intra-chunk term is a masked
+quadratic (attention-like) matmul, inter-chunk term a lax.scan over chunk
+states — linear in sequence length, which is what makes the ``long_500k``
+decode shape feasible for the SSM/hybrid architectures.
+
+Decode: O(1) per token via the carried (B, nh, hd, N) state + conv tail.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+class MambaParams(NamedTuple):
+    in_proj: jax.Array   # (D, 2*di + 2*N + nh)
+    conv_w: jax.Array    # (W, di + 2*N) depthwise causal conv
+    A_log: jax.Array     # (nh,)
+    D_skip: jax.Array    # (nh,)
+    dt_bias: jax.Array   # (nh,)
+    ssm_norm: jax.Array  # (di,)
+    out_proj: jax.Array  # (di, D)
+
+
+class MambaState(NamedTuple):
+    h: jax.Array         # (B, nh, hd, N) SSM state
+    conv: jax.Array      # (B, W-1, di + 2*N) conv tail
+
+
+def _dims(cfg: ModelConfig):
+    sc = cfg.ssm
+    di = sc.expand * cfg.d_model
+    nh = di // sc.head_dim
+    return di, nh, sc.state_dim, sc.conv_width, sc.head_dim
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> MambaParams:
+    di, nh, n, w, _ = _dims(cfg)
+    ks = jax.random.split(key, 3)
+    return MambaParams(
+        in_proj=dense_init(ks[0], (cfg.d_model, 2 * di + 2 * n + nh), dtype),
+        conv_w=dense_init(ks[1], (w, di + 2 * n), dtype, scale=0.5),
+        A_log=jnp.zeros((nh,), jnp.float32),          # A = -exp(0) = -1
+        D_skip=jnp.ones((nh,), jnp.float32),
+        dt_bias=jnp.zeros((nh,), jnp.float32),
+        ssm_norm=jnp.zeros((di,), dtype),
+        out_proj=dense_init(ks[2], (di, cfg.d_model), dtype),
+    )
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    di, nh, n, _, _ = _dims(cfg)
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [di + 2 * n], axis=-1)
+    return z, xbc, dt  # (…, di), (…, di+2N), (…, nh)
+
+
+def _causal_conv(xbc: jax.Array, conv_w: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time.  xbc: (B, S, C); conv_w: (W, C)."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(w):  # W is tiny (4): unrolled taps
+        out = out + pad[:, i:i + xbc.shape[1], :] * conv_w[i]
+    return jax.nn.silu(out)
+
+
+def ssd_scan(x, dt, a_log, bmat, cmat, chunk: int):
+    """Chunked SSD.  x: (B,S,nh,hd); dt: (B,S,nh); bmat/cmat: (B,S,N).
+
+    Returns (y, final_state) with y: (B,S,nh,hd), state: (B,nh,hd,N).
+    """
+    b, s, nh, hd = x.shape
+    n = bmat.shape[-1]
+    l = min(chunk, s)
+    assert s % l == 0, (s, l)
+    nc = s // l
+    a = -jnp.exp(a_log.astype(jnp.float32))            # (nh,) negative
+    la = dt.astype(jnp.float32) * a                     # (B,S,nh) log-decay
+
+    xc = x.reshape(b, nc, l, nh, hd).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, l, nh).astype(jnp.float32)
+    lac = la.reshape(b, nc, l, nh)
+    bc = bmat.reshape(b, nc, l, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, l, n).astype(jnp.float32)
+
+    cum = jnp.cumsum(lac, axis=2)                       # (B,nc,L,nh)
+    seg_total = cum[:, :, -1, :]                        # (B,nc,nh)
+
+    def chunk_step(h, inp):
+        xk, dtk, lak, cumk, bk, ck, totk = inp
+        # intra-chunk (quadratic within L):
+        # T[b,h,i,j] = (C_i·B_j) * exp(cum_i - cum_j) * dt_j   (i >= j)
+        cb = jnp.einsum("bin,bjn->bij", ck, bk)          # (B,L,L)
+        dec = cumk[:, :, None, :] - cumk[:, None, :, :]  # (B,L,L,nh)
+        mask = jnp.tril(jnp.ones((l, l), bool))
+        t = jnp.where(mask[None, :, :, None],
+                      cb[..., None] * jnp.exp(dec) * dtk[:, None, :, :], 0.0)
+        y_intra = jnp.einsum("bijh,bjhd->bihd", t, xk)
+        # inter-chunk: contribution of the entering state
+        y_inter = jnp.einsum("bin,bhdn,bih->bihd", ck, h, jnp.exp(cumk))
+        # state update: h' = exp(total) * h + sum_j exp(total-cum_j) dt_j x_j B_j^T
+        w = jnp.exp(totk[:, None, :] - cumk) * dtk       # (B,L,nh)
+        s_new = jnp.einsum("bjh,bjhd,bjn->bhdn", w, xk, bk)
+        h_new = jnp.exp(totk)[:, :, None, None] * h + s_new
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b, nh, hd, n), jnp.float32)
+    xs = (xc.swapaxes(0, 1), dtc.swapaxes(0, 1), lac.swapaxes(0, 1),
+          cum.swapaxes(0, 1), bc.swapaxes(0, 1), cc.swapaxes(0, 1),
+          seg_total.swapaxes(0, 1))
+    h_final, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, nh, hd)
+    return y, h_final
+
+
+def mamba_forward(p: MambaParams, cfg: ModelConfig, x: jax.Array
+                  ) -> tuple[jax.Array, MambaState]:
+    """Full-sequence forward.  x: (B, S, D) -> (y, final_state)."""
+    di, nh, n, w, hd = _dims(cfg)
+    b, s, _ = x.shape
+    z, xbc, dt = _split_proj(cfg, x @ p.in_proj)
+    conv_tail = xbc[:, max(0, s - (w - 1)):, :]
+    pad_t = (w - 1) - conv_tail.shape[1]
+    conv_tail = jnp.pad(conv_tail, ((0, 0), (pad_t, 0), (0, 0)))
+    xbc = _causal_conv(xbc, p.conv_w)
+    xin, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)
+    y, h = ssd_scan(xin.reshape(b, s, nh, hd), dt_s, p.A_log, bmat, cmat,
+                    cfg.ssm.chunk)
+    y = y + p.D_skip[None, None, :, None] * xin.reshape(
+        b, s, nh, hd).astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p.ssm_norm, cfg.norm_eps)
+    return y @ p.out_proj, MambaState(h, conv_tail)
+
+
+def init_mamba_state(batch: int, cfg: ModelConfig, dtype) -> MambaState:
+    di, nh, n, w, hd = _dims(cfg)
+    return MambaState(
+        h=jnp.zeros((batch, nh, hd, n), jnp.float32),
+        conv=jnp.zeros((batch, w - 1, di + 2 * n), dtype),
+    )
+
+
+def mamba_decode(p: MambaParams, cfg: ModelConfig, x: jax.Array,
+                 state: MambaState) -> tuple[jax.Array, MambaState]:
+    """One-token decode.  x: (B, 1, D)."""
+    di, nh, n, w, hd = _dims(cfg)
+    b = x.shape[0]
+    z, xbc, dt = _split_proj(cfg, x[:, 0, :] @ p.in_proj)  # (B, …)
+    window = jnp.concatenate([state.conv, xbc[:, None, :]], axis=1)  # (B,W,C)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, p.conv_w))
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)  # (B, nh)
+    a = -jnp.exp(p.A_log.astype(jnp.float32))
+    decay = jnp.exp(dt_s * a)                                   # (B, nh)
+    xh = xin.reshape(b, nh, hd).astype(jnp.float32)
+    h = (state.h * decay[:, :, None, None] +
+         jnp.einsum("bh,bhd,bn->bhdn", dt_s, xh, bmat.astype(jnp.float32)))
+    y = jnp.einsum("bn,bhdn->bhd", cmat.astype(jnp.float32), h)
+    y = y + p.D_skip[None, :, None] * xh
+    y = y.reshape(b, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p.ssm_norm, cfg.norm_eps)
+    return (y @ p.out_proj)[:, None, :], MambaState(h, window[:, 1:, :])

@@ -1,0 +1,288 @@
+"""Model assembly: pattern-block decoder with scan-over-layers.
+
+The repeating ``cfg.pattern`` of (mixer, ffn) blocks is scanned over
+``cfg.n_repeats`` with stacked weights — one compiled block body regardless
+of depth (61-layer/1T-param configs lower with bounded HLO).  Remat wraps
+the block body (``cfg.remat == "block"``).
+
+Entry points:
+  init_params / forward / loss_fn          — training
+  init_caches / prefill / decode_step      — serving
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.config import ModelConfig
+from repro.models.embedding import embed_tokens, lm_head_loss_chunked
+from repro.models.layers import dense_init, glu_ffn, rms_norm
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_position(key, cfg: ModelConfig, mixer: str, ffn: str) -> dict:
+    kmix, kffn = jax.random.split(key)
+    dt = _dtype(cfg)
+    out: dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), dt)}
+    if mixer in ("attn", "xattn"):
+        out["mixer"] = attn.init_attn(kmix, cfg, dt)._asdict()
+    elif mixer == "mamba":
+        out["mixer"] = ssm.init_mamba(kmix, cfg, dt)._asdict()
+    else:
+        raise ValueError(mixer)
+    if ffn == "dense":
+        ks = jax.random.split(kffn, 3)
+        out["ln2"] = jnp.zeros((cfg.d_model,), dt)
+        out["ffn"] = {
+            "w_in": dense_init(ks[0], (cfg.d_model, cfg.d_ff), dt),
+            "w_gate": dense_init(ks[1], (cfg.d_model, cfg.d_ff), dt),
+            "w_out": dense_init(ks[2], (cfg.d_ff, cfg.d_model), dt),
+        }
+    elif ffn == "moe":
+        out["ln2"] = jnp.zeros((cfg.d_model,), dt)
+        out["ffn"] = moe_mod.init_moe(kffn, cfg, dt)._asdict()
+    return out
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dt = _dtype(cfg)
+    kemb, khead, kblk = jax.random.split(key, 3)
+    blocks = []
+    for pos, (mixer, ffn) in enumerate(cfg.pattern):
+        kpos = jax.random.fold_in(kblk, pos)
+        keys = jax.random.split(kpos, cfg.n_repeats)
+        blocks.append(jax.vmap(
+            lambda k: _init_position(k, cfg, mixer, ffn))(keys))
+    params = {
+        "embed": {"tokens": dense_init(kemb, (cfg.vocab_size, cfg.d_model),
+                                       dt, scale=0.02)},
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(khead, (cfg.d_model, cfg.vocab_size),
+                                       dt)
+    return params
+
+
+def _lm_head(cfg: ModelConfig, params) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"]["tokens"].T
+    return params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# training forward
+# ---------------------------------------------------------------------------
+
+def _apply_position(cfg: ModelConfig, p: dict, mixer: str, ffn: str,
+                    x: jax.Array, positions: jax.Array,
+                    image_embeds: jax.Array | None) -> jax.Array:
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if mixer == "attn":
+        mx = attn.self_attention(attn.AttnParams(**p["mixer"]), cfg, h,
+                                 positions)
+    elif mixer == "xattn":
+        mx = attn.cross_attention(attn.AttnParams(**p["mixer"]), cfg, h,
+                                  image_embeds)
+    else:
+        mx, _ = ssm.mamba_forward(ssm.MambaParams(**p["mixer"]), cfg, h)
+    x = x + mx
+    if ffn != "none":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if ffn == "dense":
+            f = glu_ffn(h2, p["ffn"]["w_in"], p["ffn"]["w_gate"],
+                        p["ffn"]["w_out"], cfg.act)
+        else:
+            f = moe_mod.moe_ffn(moe_mod.MoEParams(**p["ffn"]), cfg, h2,
+                                cfg.act)
+        x = x + f
+    if cfg.sp and x.shape[1] % 8 == 0:
+        return constrain(x, "dp", "tp", None)   # sequence-parallel boundary
+    return constrain(x, "dp", None, None)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            image_embeds: jax.Array | None = None) -> jax.Array:
+    """tokens: (B, S) -> hidden states (B, S, D)."""
+    b, s = tokens.shape
+    x = embed_tokens(params["embed"]["tokens"], tokens,
+                     dedup=cfg.dedup_embed)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def block_fn(x, blk):
+        for pos, (mixer, ffn) in enumerate(cfg.pattern):
+            x = _apply_position(cfg, blk[pos], mixer, ffn, x, positions,
+                                image_embeds)
+        return x
+
+    body = jax.checkpoint(block_fn) if cfg.remat == "block" else block_fn
+    x, _ = jax.lax.scan(lambda c, blk: (body(c, blk), None), x,
+                        params["blocks"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            labels: jax.Array,
+            image_embeds: jax.Array | None = None) -> jax.Array:
+    h = forward(cfg, params, tokens, image_embeds)
+    return lm_head_loss_chunked(h, _lm_head(cfg, params), labels,
+                                cfg.loss_chunk)
+
+
+# ---------------------------------------------------------------------------
+# serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                n_image_tokens: int = 0) -> list:
+    """Stacked (n_repeats leading) cache pytree per pattern position."""
+    dt = _dtype(cfg)
+    r = cfg.n_repeats
+    caches = []
+    for mixer, _ in cfg.pattern:
+        if mixer == "attn":
+            c = attn.init_kv_cache(batch, max_seq, cfg, dt)
+        elif mixer == "xattn":
+            c = attn.init_kv_cache(batch, max(n_image_tokens, 1), cfg, dt)
+        else:
+            c = ssm.init_mamba_state(batch, cfg, dt)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (r,) + a.shape), c))
+    return caches
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            max_seq: int | None = None,
+            image_embeds: jax.Array | None = None
+            ) -> tuple[jax.Array, list]:
+    """Run the prompt, return (last-token logits (B, V), caches)."""
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    x = embed_tokens(params["embed"]["tokens"], tokens,
+                     dedup=cfg.dedup_embed)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    dt = _dtype(cfg)
+
+    def block_fn(x, blk):
+        new_caches = []
+        for pos, (mixer, ffn) in enumerate(cfg.pattern):
+            p = blk[pos]
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            if mixer == "attn":
+                ap = attn.AttnParams(**p["mixer"])
+                q, k, v = attn._project_qkv(ap, cfg, h, positions)
+                o = attn.blockwise_attention(q, k, v, causal=True,
+                                             chunk=cfg.attn_chunk)
+                mx = o.reshape(b, s, -1) @ ap.wo
+                kc = jnp.zeros((b, max_seq) + k.shape[2:], dt)
+                vc = jnp.zeros((b, max_seq) + v.shape[2:], dt)
+                cache = attn.KVCache(
+                    jax.lax.dynamic_update_slice(kc, k.astype(dt),
+                                                 (0, 0, 0, 0)),
+                    jax.lax.dynamic_update_slice(vc, v.astype(dt),
+                                                 (0, 0, 0, 0)))
+            elif mixer == "xattn":
+                ap = attn.AttnParams(**p["mixer"])
+                q, k, v = attn._project_qkv(ap, cfg, h, positions,
+                                            kv_x=image_embeds,
+                                            use_rope=False)
+                o = attn.blockwise_attention(
+                    q, k, v, causal=False,
+                    chunk=min(cfg.attn_chunk, image_embeds.shape[1]))
+                mx = o.reshape(b, s, -1) @ ap.wo
+                cache = attn.KVCache(k.astype(dt), v.astype(dt))
+            else:
+                mp = ssm.MambaParams(**p["mixer"])
+                mx, cache = ssm.mamba_forward(mp, cfg, h)
+            x = x + mx
+            if ffn != "none":
+                h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+                if ffn == "dense":
+                    f = glu_ffn(h2, p["ffn"]["w_in"], p["ffn"]["w_gate"],
+                                p["ffn"]["w_out"], cfg.act)
+                else:
+                    f = moe_mod.moe_ffn(moe_mod.MoEParams(**p["ffn"]), cfg,
+                                        h2, cfg.act)
+                x = x + f
+            x = (constrain(x, "dp", "tp", None)
+                 if cfg.sp and x.shape[1] % 8 == 0
+                 else constrain(x, "dp", None, None))
+            new_caches.append(cache)
+        return x, new_caches
+
+    body = jax.checkpoint(block_fn) if cfg.remat == "block" else block_fn
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1, :] @ _lm_head(cfg, params)).astype(jnp.float32)
+    return logits, caches
+
+
+def decode_step(cfg: ModelConfig, params: dict, caches: list,
+                token: jax.Array, pos: jax.Array
+                ) -> tuple[jax.Array, list]:
+    """One-token decode.  token: (B, 1); pos: () int32.
+
+    Returns (logits (B, V), updated caches).
+    """
+    b = token.shape[0]
+    x = embed_tokens(params["embed"]["tokens"], token,
+                     dedup=cfg.dedup_embed)
+
+    def block_fn(x, inp):
+        blk, cache = inp
+        new_caches = []
+        for p_idx, (mixer, ffn) in enumerate(cfg.pattern):
+            p = blk[p_idx]
+            c = cache[p_idx]
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            if mixer == "attn":
+                mx, c = attn.decode_attention(attn.AttnParams(**p["mixer"]),
+                                              cfg, h, attn.KVCache(*c), pos)
+            elif mixer == "xattn":
+                ap = attn.AttnParams(**p["mixer"])
+                kv = attn.KVCache(*c)
+                hd = cfg.resolved_head_dim
+                q = (h @ ap.wq).reshape(b, 1, cfg.n_heads, hd)
+                if cfg.qk_norm:
+                    q = rms_norm(q, ap.q_norm, cfg.norm_eps)
+                o = attn.blockwise_attention(
+                    q, kv.k, kv.v, causal=False,
+                    chunk=min(cfg.attn_chunk, kv.k.shape[1]))
+                mx = o.reshape(b, 1, -1) @ ap.wo
+            else:
+                mx, c = ssm.mamba_decode(ssm.MambaParams(**p["mixer"]), cfg,
+                                         h, ssm.MambaState(*c))
+            x = x + mx
+            if ffn != "none":
+                h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+                if ffn == "dense":
+                    f = glu_ffn(h2, p["ffn"]["w_in"], p["ffn"]["w_gate"],
+                                p["ffn"]["w_out"], cfg.act)
+                else:
+                    f = moe_mod.moe_ffn(moe_mod.MoEParams(**p["ffn"]), cfg,
+                                        h2, cfg.act)
+                x = x + f
+            new_caches.append(tuple(c))
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(
+        block_fn, x, (params["blocks"],
+                      [tuple(c) for c in caches]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1, :] @ _lm_head(cfg, params)).astype(jnp.float32)
+    return logits, [type(c)(*nc) if hasattr(c, "_fields") else nc
+                    for c, nc in zip(caches, new_caches)]

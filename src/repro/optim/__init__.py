@@ -1,0 +1,4 @@
+from repro.optim.adamw import OptConfig, apply_updates, global_norm, init_opt_state, schedule
+from repro.optim.compress import psum_compressed, quantize_with_feedback
+__all__ = ["OptConfig", "apply_updates", "global_norm", "init_opt_state",
+           "schedule", "psum_compressed", "quantize_with_feedback"]

@@ -1,0 +1,160 @@
+"""AdamW in pure JAX, with optional 8-bit (blockwise-quantized) moments.
+
+8-bit moments are a distributed-optimization feature for the trillion-param
+configs: m and v are stored int8 with one f32 scale per 256-element block
+(dynamic blockwise quantization), cutting optimizer-state HBM 4×; the
+master update still happens in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"      # "float32" | "int8"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    # QSGD-style gradient quantization with error feedback (models the
+    # compressed cross-pod all-reduce; see optim/compress.py)
+    grad_quant_bits: int = 0           # 0 = off, 8 = int8
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8 moment quantization
+# ---------------------------------------------------------------------------
+
+def _quant(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Blockwise int8 along the LAST dim only, preserving leading dims so
+    quantized moments inherit the parameter's sharding on those dims."""
+    if x.ndim == 0:
+        x = x[None]
+    *lead, last = x.shape
+    pad = (-last) % QBLOCK
+    xb = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    xb = xb.reshape(*lead, (last + pad) // QBLOCK, QBLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(xb / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    x = (q.astype(jnp.float32) * scale)
+    *lead, nb, qb = x.shape
+    x = x.reshape(*lead, nb * qb)
+    last = shape[-1] if shape else 1
+    x = x[..., :last]
+    return x.reshape(shape)
+
+
+def _moment_init(p: jax.Array, dtype: str):
+    if dtype == "int8":
+        q, s = _quant(jnp.zeros(p.shape, jnp.float32))
+        return {"q": q, "s": s}
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def _moment_get(m: Any, shape) -> jax.Array:
+    if isinstance(m, dict):
+        return _dequant(m["q"], m["s"], shape)
+    return m
+
+
+def _moment_set(val: jax.Array, dtype: str):
+    if dtype == "int8":
+        q, s = _quant(val)
+        return {"q": q, "s": s}
+    return val
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def init_opt_state(params, cfg: OptConfig) -> dict:
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: _moment_init(p, cfg.moment_dtype), params),
+        "v": jax.tree.map(lambda p: _moment_init(p, cfg.moment_dtype), params),
+    }
+    if cfg.grad_quant_bits:
+        state["err"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state, cfg: OptConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    if cfg.grad_quant_bits:
+        from repro.optim.compress import quantize_with_feedback
+        grads, new_err = quantize_with_feedback(grads, state["err"],
+                                                cfg.grad_quant_bits)
+    else:
+        new_err = state.get("err")
+
+    is_moment_leaf = lambda x: isinstance(x, dict) and "q" in x
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = _moment_get(m, p.shape)
+        vf = _moment_get(v, p.shape)
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * g * g
+        mhat = mf / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = vf / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        new_p = (p.astype(jnp.float32) * (1 - lr * cfg.weight_decay)
+                 - lr * delta).astype(p.dtype)
+        return new_p, _moment_set(mf, cfg.moment_dtype), _moment_set(
+            vf, cfg.moment_dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {
+        "step": step,
+        "m": tdef.unflatten([o[1] for o in out]),
+        "v": tdef.unflatten([o[2] for o in out]),
+    }
+    if new_err is not None:
+        new_state["err"] = new_err
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

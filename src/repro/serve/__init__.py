@@ -1,0 +1,3 @@
+from repro.serve.engine import Server, make_serve_step
+from repro.serve.paged_kv import PageTable
+__all__ = ["Server", "make_serve_step", "PageTable"]

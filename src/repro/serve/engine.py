@@ -1,0 +1,84 @@
+"""Batched serving engine: prefill + jitted greedy decode loop.
+
+``serve_step`` (one new token against a deep KV cache) is the function the
+decode-shape dry-runs lower.  The engine demonstrates the JSPIM
+integrations end to end: dedup-embedding on the (skewed) batch token
+stream and a JSPIM page table for KV paging.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, init_caches, prefill
+from repro.serve.paged_kv import PageTable
+
+
+def make_serve_step(cfg: ModelConfig):
+    """Jit-able serve_step(params, caches, token, pos) -> (logits, caches)."""
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def serve_step(params, caches, token, pos):
+        return decode_step(cfg, params, caches, token, pos)
+    return serve_step
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: jax.Array   # (B, steps)
+    steps: int
+
+
+class Server:
+    """Static-batch greedy server with paged-KV bookkeeping."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int, batch: int,
+                 page_size: int = 256):
+        self.cfg, self.params = cfg, params
+        self.max_seq, self.batch = max_seq, batch
+        self.serve_step = make_serve_step(cfg)
+        self.pages = PageTable(
+            n_physical=batch * max(1, max_seq // page_size) + 8,
+            max_pages_per_seq=max(1, max_seq // page_size))
+        self.page_size = page_size
+
+    def generate(self, prompts: jax.Array, steps: int,
+                 image_embeds=None) -> GenerationResult:
+        b, s = prompts.shape
+        assert b == self.batch
+        # page bookkeeping for the prompt
+        for seq in range(b):
+            for pg in range((s + self.page_size - 1) // self.page_size):
+                self.pages.alloc(seq, pg)
+        logits, caches = prefill(self.cfg, self.params, prompts,
+                                 max_seq=self.max_seq,
+                                 image_embeds=image_embeds)
+        # merge prefill caches into full-length decode caches
+        full = init_caches(self.cfg, b, self.max_seq,
+                           self.cfg.n_image_tokens)
+        merged = []
+        for (mixer, _), pc, fc in zip(self.cfg.pattern, caches, full):
+            if mixer == "attn":
+                merged.append(type(fc)(
+                    jax.lax.dynamic_update_slice(
+                        fc.k, pc.k.astype(fc.k.dtype), (0, 0, 0, 0, 0)),
+                    jax.lax.dynamic_update_slice(
+                        fc.v, pc.v.astype(fc.v.dtype), (0, 0, 0, 0, 0))))
+            else:
+                merged.append(pc)
+        caches = merged
+        out = []
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        for t in range(steps):
+            pos = jnp.int32(s + t)
+            # allocate a page when a sequence crosses a page boundary
+            if int(s + t) % self.page_size == 0:
+                for seq in range(b):
+                    self.pages.alloc(seq, int(s + t) // self.page_size)
+            out.append(tok)
+            logits, caches = self.serve_step(self.params, caches, tok, pos)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return GenerationResult(jnp.concatenate(out, axis=1), steps)

@@ -1,0 +1,80 @@
+"""Paged KV-cache with a JSPIM page table.
+
+The page table maps (sequence, logical_page) -> physical page — a
+select-where(=) query.  It is kept as a JSPIM hash table (unique keys by
+construction: one physical page per logical page), so page resolution is a
+single O(1) associative probe regardless of pool occupancy or sequence-
+length skew across the batch — the serving analogue of the paper's
+constant-latency lookups.  Allocation/free are the paper's entry/index
+update commands.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_table, probe, suggest_num_buckets
+from repro.core.hash_table import JSPIMTable
+
+
+def _key(seq_id, page_idx, max_pages: int):
+    return seq_id * max_pages + page_idx
+
+
+@dataclasses.dataclass
+class PageTable:
+    """Host-managed allocator + device-resident JSPIM lookup table."""
+
+    n_physical: int
+    max_pages_per_seq: int
+    bucket_width: int = 128
+
+    def __post_init__(self):
+        self._free = list(range(self.n_physical))[::-1]
+        self._map: dict[int, int] = {}   # logical key -> physical page
+        self._dirty = True
+        self._table: JSPIMTable | None = None
+
+    # -- update commands (§3.2.3) -----------------------------------------
+    def alloc(self, seq_id: int, page_idx: int) -> int:
+        if not self._free:
+            raise RuntimeError("page pool exhausted")
+        phys = self._free.pop()
+        self._map[_key(seq_id, page_idx, self.max_pages_per_seq)] = phys
+        self._dirty = True
+        return phys
+
+    def free_seq(self, seq_id: int):
+        base = seq_id * self.max_pages_per_seq
+        for k in [k for k in self._map if base <= k < base + self.max_pages_per_seq]:
+            self._free.append(self._map.pop(k))
+        self._dirty = True
+
+    # -- select-where(=) lookups -------------------------------------------
+    def table(self) -> JSPIMTable:
+        if self._dirty:
+            keys = np.fromiter(self._map.keys(), np.int32,
+                               count=len(self._map))
+            vals = np.fromiter(self._map.values(), np.int32,
+                               count=len(self._map))
+            if keys.size == 0:
+                keys = np.array([0], np.int32)
+                vals = np.array([0], np.int32)
+            nb = suggest_num_buckets(max(len(self._map), 1),
+                                     self.bucket_width)
+            self._table = build_table(
+                jnp.asarray(keys), jnp.asarray(vals), num_buckets=nb,
+                bucket_width=self.bucket_width, hash_mode="fibonacci")
+            self._dirty = False
+        return self._table
+
+    def lookup(self, seq_ids: jax.Array, page_idxs: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+        """Batch page resolution: one associative probe."""
+        keys = _key(seq_ids.astype(jnp.int32), page_idxs.astype(jnp.int32),
+                    self.max_pages_per_seq)
+        pr = probe(self.table(), keys)
+        return pr.found, pr.payload

@@ -1,0 +1,3 @@
+from repro.train.step import init_train_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+__all__ = ["init_train_state", "make_train_step", "Trainer", "TrainerConfig"]

@@ -1,0 +1,61 @@
+"""train_step: microbatched gradient accumulation + AdamW, pjit-ready.
+
+The batch arrives as (microbatches, per_step_batch, seq); a lax.scan
+accumulates grads so activation memory is bounded by one microbatch
+(remat inside the model bounds it further to one block).  This is the
+function the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import loss_fn
+from repro.optim.adamw import OptConfig, apply_updates, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    accum_dtype: str = "float32"):
+    """Returns train_step(params, opt_state, batch) -> (params', state', metrics)."""
+    acc_dt = jnp.dtype(accum_dtype)
+
+    def micro_loss(params, tokens, labels, image_embeds):
+        return loss_fn(cfg, params, tokens, labels, image_embeds)
+
+    grad_fn = jax.value_and_grad(micro_loss)
+
+    def train_step(params, opt_state, batch: dict[str, Any]):
+        tokens = batch["tokens"]          # (MB, per, S)
+        labels = batch["labels"]
+        image = batch.get("image_embeds")  # (MB, per, N, D) | None
+        mb = tokens.shape[0]
+
+        def body(carry, xs):
+            loss_acc, grads_acc = carry
+            tk, lb = xs[0], xs[1]
+            im = xs[2] if image is not None else None
+            loss, grads = grad_fn(params, tk, lb, im)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(acc_dt), grads_acc, grads)
+            return (loss_acc + loss, grads_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        xs = (tokens, labels, image) if image is not None else (tokens, labels)
+        (loss_sum, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zeros), xs)
+        grads = jax.tree.map(lambda g: g / mb, grads)
+        new_params, new_state, metrics = apply_updates(params, grads,
+                                                       opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss_sum / mb)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: OptConfig, key: jax.Array):
+    from repro.models.transformer import init_params
+    params = init_params(cfg, key)
+    return params, init_opt_state(params, opt_cfg)

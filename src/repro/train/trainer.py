@@ -1,0 +1,108 @@
+"""Fault-tolerant training loop.
+
+Large-scale posture (synchronous SPMD):
+ * **checkpoint/restart** — atomic rotating checkpoints of (params, opt
+   state, data cursor); ``run()`` auto-resumes from the newest one, so a
+   killed job restarted with the same command continues exactly (the data
+   stream is seekable by step).
+ * **node failure / elastic scaling** — a restore may target a different
+   mesh; ``launch/elastic.py`` re-shards the checkpoint onto the surviving
+   devices and the loop continues with the new mesh.
+ * **straggler mitigation** — a step-time watchdog tracks a robust moving
+   median; steps slower than ``straggler_factor``× median are counted and
+   surfaced in metrics.  In synchronous SPMD the remediation is operational
+   (checkpoint + elastic shrink of the slow host), both of which this
+   trainer supports; the watchdog provides the trigger signal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import ZipfTokenStream, shard_batch
+from repro.models.config import ModelConfig
+from repro.optim.adamw import OptConfig
+from repro.train.step import init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    global_batch: int = 8
+    microbatches: int = 1
+    seq_len: int = 128
+    ckpt_every: int = 50
+    log_every: int = 10
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_ckpts: int = 3
+    straggler_factor: float = 2.0
+    zipf_s: float = 1.1
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, opt: OptConfig, tc: TrainerConfig,
+                 mesh: jax.sharding.Mesh | None = None,
+                 log_fn: Callable[[str], None] = print):
+        self.cfg, self.opt, self.tc, self.mesh = cfg, opt, tc, mesh
+        self.log = log_fn
+        self.ckpt = CheckpointManager(tc.ckpt_dir, keep=tc.keep_ckpts)
+        self.stream = ZipfTokenStream(cfg.vocab_size, tc.seq_len,
+                                      zipf_s=tc.zipf_s, seed=tc.seed)
+        self.train_step = jax.jit(make_train_step(cfg, opt))
+        self.step_times: list[float] = []
+        self.straggler_events = 0
+
+    def _state_template(self, key):
+        return jax.eval_shape(lambda: init_train_state(self.cfg, self.opt,
+                                                       key))
+
+    def run(self, fail_at_step: int | None = None) -> dict:
+        """Train; ``fail_at_step`` injects a crash (fault-tolerance tests)."""
+        tc = self.tc
+        key = jax.random.PRNGKey(tc.seed)
+        start = self.ckpt.latest()
+        if start is not None:
+            template = jax.eval_shape(
+                lambda k: init_train_state(self.cfg, self.opt, k), key)
+            params, opt_state = self.ckpt.restore_latest(template)[1]
+            self.log(f"[trainer] resumed from step {start}")
+        else:
+            params, opt_state = init_train_state(self.cfg, self.opt, key)
+            start = 0
+        losses = []
+        for step in range(start, tc.steps):
+            if fail_at_step is not None and step == fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            t0 = time.time()
+            batch = shard_batch(self.stream.batch(step, tc.global_batch),
+                                self.mesh, tc.microbatches)
+            params, opt_state, metrics = self.train_step(params, opt_state,
+                                                         batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.time() - t0
+            self._watchdog(dt, step)
+            if (step + 1) % tc.ckpt_every == 0 or step + 1 == tc.steps:
+                self.ckpt.save(step + 1, (params, opt_state))
+            if (step + 1) % tc.log_every == 0:
+                self.log(f"[trainer] step {step + 1} loss {loss:.4f} "
+                         f"({dt * 1e3:.0f} ms)")
+        return {"params": params, "opt_state": opt_state, "losses": losses,
+                "straggler_events": self.straggler_events}
+
+    def _watchdog(self, dt: float, step: int):
+        self.step_times.append(dt)
+        hist = self.step_times[-50:]
+        if len(hist) >= 5:
+            med = statistics.median(hist)
+            if dt > self.tc.straggler_factor * med and step > 2:
+                self.straggler_events += 1
+                self.log(f"[trainer] straggler: step {step} took "
+                         f"{dt * 1e3:.0f} ms (median {med * 1e3:.0f} ms)")

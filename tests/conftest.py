@@ -1,0 +1,28 @@
+"""Test harness config.
+
+Smoke tests and benches must see exactly ONE device — XLA_FLAGS is NOT set
+here (the 512-device override lives only in launch/dryrun.py and the
+subprocess-based sharding tests).
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import warnings
+
+import pytest
+from hypothesis import HealthCheck, settings
+
+warnings.filterwarnings("ignore", category=UserWarning)
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+settings.register_profile(
+    "ci", max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)

@@ -1,0 +1,126 @@
+"""Core JSPIM structures: dictionary, hash table, dup list, probe, updates."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (EMPTY_KEY, build_dictionary, build_table, coalesce,
+                        decode, encode, entry_update, index_update, join,
+                        probe, probe_deduped, select_distinct,
+                        select_where_eq, suggest_num_buckets, table_update)
+
+keys_strategy = st.lists(st.integers(0, 500), min_size=1, max_size=200)
+
+
+def _mk_table(dim_keys, bucket_width=16):
+    dim_keys = np.asarray(dim_keys, np.int32)
+    d = build_dictionary(jnp.asarray(dim_keys), capacity=len(dim_keys))
+    codes = encode(d, jnp.asarray(dim_keys))
+    nb = suggest_num_buckets(len(dim_keys), bucket_width)
+    t = build_table(codes, jnp.arange(len(dim_keys)), num_buckets=nb,
+                    bucket_width=bucket_width)
+    return d, t
+
+
+def test_dictionary_roundtrip():
+    raw = np.array([9, 3, 9, 7, 1000000, 3], np.int32)
+    d = build_dictionary(jnp.asarray(raw), capacity=8)
+    codes = encode(d, jnp.asarray(raw))
+    assert int(d.n) == 4
+    assert np.all(np.asarray(decode(d, codes)) == raw)
+    # absent key
+    assert int(encode(d, jnp.asarray([5], jnp.int32))[0]) == -1
+
+
+@given(keys_strategy)
+def test_dictionary_property(keys):
+    raw = np.asarray(keys, np.int32)
+    d = build_dictionary(jnp.asarray(raw), capacity=len(raw))
+    codes = np.asarray(encode(d, jnp.asarray(raw)))
+    # codes are dense, order-preserving ranks of the distinct keys
+    uniq = np.unique(raw)
+    assert codes.min() >= 0
+    assert np.all(np.asarray(decode(d, jnp.asarray(codes))) == raw)
+    assert len(np.unique(codes)) == len(uniq)
+
+
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=150),
+       st.lists(st.integers(0, 150), min_size=1, max_size=150))
+def test_probe_and_join_match_oracle(dim_keys, fact_keys):
+    """The paper's core invariant: probe finds exactly the stored keys and
+    join expands exactly the duplicate groups."""
+    dim = np.asarray(dim_keys, np.int32)
+    fact = np.asarray(fact_keys, np.int32)
+    d, t = _mk_table(dim)
+    assert int(t.overflow) == 0
+    codes = encode(d, jnp.asarray(fact))
+    pr = probe(t, codes)
+    found = np.asarray(pr.found)
+    assert np.array_equal(found, np.isin(fact, dim))
+    # O(1) check: every present key resolves; payload semantics
+    cnt = {k: (dim == k).sum() for k in np.unique(dim)}
+    for i, k in enumerate(fact):
+        if found[i]:
+            if cnt[k] == 1:
+                assert int(pr.payload[i]) == int(np.flatnonzero(dim == k)[0])
+                assert not bool(pr.is_dup[i])
+            else:
+                assert bool(pr.is_dup[i])
+    # full join vs oracle
+    expected = {(i, j) for i, fk in enumerate(fact)
+                for j, dk in enumerate(dim) if fk == dk}
+    cap = max(8, len(expected) + 4)
+    jr = join(t, codes, capacity=cap)
+    got = {(int(l), int(r)) for l, r in zip(jr.left, jr.right) if l >= 0}
+    assert got == expected
+    assert int(jr.n_matches) == len(expected)
+
+
+def test_probe_deduped_equals_probe(rng):
+    dim = rng.choice(300, 120, replace=False).astype(np.int32)
+    fact = rng.choice(400, 500).astype(np.int32)
+    d, t = _mk_table(dim)
+    codes = encode(d, jnp.asarray(fact))
+    a, b = probe(t, codes), probe_deduped(t, codes)
+    assert np.array_equal(np.asarray(a.found), np.asarray(b.found))
+    f = np.asarray(a.found)
+    assert np.array_equal(np.asarray(a.payload)[f], np.asarray(b.payload)[f])
+
+
+def test_select_distinct_and_where():
+    dim = np.array([4, 4, 9, 2, 9, 9], np.int32)
+    d, t = _mk_table(dim)
+    distinct = np.asarray(select_distinct(t, capacity=8))
+    live = sorted(x for x in distinct.tolist() if x != int(EMPTY_KEY))
+    assert len(live) == 3  # codes of {2, 4, 9}
+    # where eq on a duplicated key returns all row indices
+    code9 = int(encode(d, jnp.asarray([9], jnp.int32))[0])
+    sr = select_where_eq(t, code9, capacity=8)
+    rows = sorted(int(r) for r in sr.right if r >= 0)
+    assert rows == [2, 4, 5]
+
+
+def test_update_commands():
+    dim = np.array([10, 20, 30], np.int32)
+    d, t = _mk_table(dim, bucket_width=2)  # 4 buckets: codes spread out
+    code20 = int(encode(d, jnp.asarray([20], jnp.int32))[0])
+    # index update: search + replace value
+    t2 = index_update(t, code20, jnp.int32(99))
+    pr = probe(t2, jnp.asarray([code20], jnp.int32))
+    assert bool(pr.found[0]) and int(pr.payload[0]) == 99
+    # entry update: direct cell write
+    t3 = entry_update(t, jnp.int32(0), jnp.int32(0), jnp.int32(77),
+                      jnp.int32((5 << 1)))
+    assert int(t3.keys[0, 0]) == 77
+    # table update: burst-write a whole bucket row
+    nb, w = t.num_buckets, t.bucket_width
+    t4 = table_update(t, jnp.asarray([1]), jnp.full((1, w), 42, jnp.int32),
+                      jnp.zeros((1, w), jnp.int32))
+    assert np.all(np.asarray(t4.keys[1]) == 42)
+
+
+def test_bucket_overflow_reported():
+    # 64 identical-bucket keys into width-8 buckets -> overflow counted
+    keys = jnp.arange(64, dtype=jnp.int32) * 4  # identity hash, bucket 0 mod 4
+    t = build_table(keys, jnp.arange(64), num_buckets=4, bucket_width=8)
+    assert int(t.overflow) > 0

@@ -1,0 +1,41 @@
+"""Coalescing-window / dedup properties (hypothesis)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from repro.core import coalesce, duplication_factor, scatter_back
+from repro.core.dedup import windowed_coalesce_mask
+
+
+@given(st.lists(st.integers(-50, 50), min_size=1, max_size=300))
+def test_coalesce_inverse_reconstructs(keys):
+    k = np.asarray(keys, np.int32)
+    co = coalesce(jnp.asarray(k), capacity=len(k))
+    rebuilt = np.asarray(co.unique)[np.asarray(co.inverse)]
+    assert np.array_equal(rebuilt, k)
+    assert int(co.n_unique) == len(np.unique(k))
+    assert not bool(co.overflow)
+
+
+@given(st.lists(st.integers(0, 20), min_size=1, max_size=200))
+def test_scatter_back_roundtrip(keys):
+    k = np.asarray(keys, np.int32)
+    co = coalesce(jnp.asarray(k), capacity=len(k))
+    # pretend per-unique results are key*2; per-probe results must follow
+    res = co.unique * 2
+    out = scatter_back(res, co.inverse)
+    assert np.array_equal(np.asarray(out), k * 2)
+
+
+def test_windowed_mask_matches_paper_window():
+    # the 8-entry optimization buffer filters repeats within the window only
+    keys = np.array([5, 5, 1, 2, 3, 4, 6, 7, 8, 9, 5], np.int32)
+    mask = np.asarray(windowed_coalesce_mask(jnp.asarray(keys), window=8))
+    assert bool(mask[1])         # immediate repeat filtered
+    assert not bool(mask[10])    # repeat of 5 at distance 10 > window
+    assert mask.sum() == 1
+
+
+def test_duplication_factor():
+    assert float(duplication_factor(jnp.asarray([1, 1, 1, 1]))) == 4.0
+    assert float(duplication_factor(jnp.asarray([1, 2, 3, 4]))) == 1.0

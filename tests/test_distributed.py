@@ -1,0 +1,144 @@
+"""Distributed behaviour on 8 host devices (subprocess — keeps the main
+test process at 1 device as required)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+sys_path = {src!r}
+import sys
+sys.path.insert(0, sys_path)
+
+from repro.configs import smoke
+from repro.data import ZipfTokenStream, shard_batch
+from repro.launch.elastic import reshard_params
+from repro.launch.sharding import param_specs
+from repro.models import init_params
+from repro.optim import OptConfig, psum_compressed
+from repro.optim.adamw import init_opt_state
+from repro.train.step import make_train_step
+
+out = {{}}
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+cfg = smoke("qwen3-4b")
+key = jax.random.PRNGKey(0)
+opt_cfg = OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+
+with jax.set_mesh(mesh):
+    params = init_params(cfg, key)
+    specs = param_specs(params)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+    params = jax.tree.map(lambda x, s: jax.device_put(x, s), params, p_sh)
+    opt_state = init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    stream = ZipfTokenStream(cfg.vocab_size, 32, seed=1)
+    losses = []
+    for i in range(4):
+        batch = shard_batch(stream.batch(i, 8), mesh, microbatches=2)
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    out["losses"] = losses
+    out["sharded"] = all(
+        not l.sharding.is_fully_replicated
+        for l in [params["embed"]["tokens"],
+                  params["blocks"][0]["ffn"]["w_in"]])
+
+# compressed cross-pod psum matches exact psum
+from jax.experimental.shard_map import shard_map
+g = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8) / 7.0}}
+gs = jax.device_put(g, jax.tree.map(
+    lambda _: NamedSharding(mesh, P(("pod",))), g))
+def f(t):
+    return psum_compressed(t, "pod")
+fm = shard_map(f, mesh=mesh, in_specs=(P(("pod",)),), out_specs=P(("pod",)))
+got = fm(gs["w"])
+# exact: every pod shard holds the sum over pods of its slice
+exact = jnp.concatenate([g["w"][:4] + g["w"][4:]] * 2, axis=0)
+out["psum_err"] = float(jnp.max(jnp.abs(got - exact)))
+
+# grouped/manual MoE path (custom_vjp shard_map dispatch) == reference
+import dataclasses
+from repro.models import loss_fn as _loss_fn
+kcfg0 = smoke("kimi-k2-1t-a32b")
+ktok = jax.random.randint(key, (4, 32), 0, kcfg0.vocab_size)
+with jax.set_mesh(mesh):
+    kp = init_params(kcfg0, key)
+    vals = {{}}
+    for g in (1, 4):
+        kcfg = dataclasses.replace(kcfg0, moe_groups=g)
+        lf = jax.jit(lambda p: jax.value_and_grad(
+            lambda pp: _loss_fn(kcfg, pp, ktok, ktok))(p))
+        l, gr = lf(kp)
+        vals[g] = (float(l), gr)
+    out["moe_loss_err"] = abs(vals[1][0] - vals[4][0])
+    out["moe_grad_err"] = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                              b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(vals[1][1]),
+                        jax.tree.leaves(vals[4][1])))
+
+# elastic: reshard onto a smaller mesh
+small = jax.make_mesh((2, 2), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+host_params = jax.tree.map(lambda x: np.asarray(x), params)
+re = reshard_params(host_params, small)
+out["elastic_ok"] = all(
+    np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    for a, b in zip(jax.tree.leaves(host_params), jax.tree.leaves(re)))
+print("RESULT::" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def result():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = SCRIPT.format(src=os.path.abspath(src))
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env.pop("PYTHONWARNINGS", None)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT::")][-1]
+    return json.loads(line[len("RESULT::"):])
+
+
+def test_sharded_training_runs_and_learns(result):
+    assert len(result["losses"]) == 4
+    assert all(np.isfinite(x) for x in result["losses"])
+    assert result["losses"][-1] < result["losses"][0]
+    assert result["sharded"]
+
+
+def test_compressed_psum_close_to_exact(result):
+    # bound: one int8 step per summand (max|x| / 127 ≈ 0.072 here) x 2 pods
+    assert result["psum_err"] < 0.15
+
+
+def test_elastic_reshard_preserves_values(result):
+    assert result["elastic_ok"]
+
+
+def test_manual_moe_dispatch_matches_reference(result):
+    """custom_vjp shard_map dispatch (the kimi hillclimb optimization) is
+    an exact rewrite of the SPMD reference path."""
+    assert result["moe_loss_err"] < 2e-4
+    assert result["moe_grad_err"] < 5e-3
+
+
+import numpy as np  # noqa: E402  (used in assertions above)

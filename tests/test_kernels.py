@@ -1,0 +1,98 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracle, shape sweeps."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_table, suggest_num_buckets
+from repro.core.hash_table import EMPTY_KEY, hash_bucket
+from repro.kernels import (bucket_probe_ref, probe_rows_ref, probe_table,
+                           probe_table_ref, unpack_words)
+from repro.kernels.bucket_probe import bucket_probe_stream, probe_rows
+
+
+def _table(n_keys, bucket_width, seed=0, hash_mode="identity"):
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(n_keys * 4, n_keys, replace=False).astype(np.int32)
+    nb = suggest_num_buckets(n_keys, bucket_width)
+    return keys, build_table(jnp.asarray(keys), jnp.arange(n_keys),
+                             num_buckets=nb, bucket_width=bucket_width,
+                             hash_mode=hash_mode)
+
+
+@pytest.mark.parametrize("bucket_width", [8, 64, 128, 256])
+@pytest.mark.parametrize("m", [1, 7, 64, 300])
+def test_probe_rows_kernel_shape_sweep(bucket_width, m):
+    keys, t = _table(200, bucket_width)
+    rng = np.random.default_rng(m)
+    probes = rng.choice(800, m).astype(np.int32)
+    bids = hash_bucket(jnp.asarray(probes), t.num_buckets, t.hash_mode)
+    rows_k, rows_v = t.keys[bids], t.values[bids]
+    got = probe_rows(jnp.asarray(probes), rows_k, rows_v, block_pb=64,
+                     interpret=True)
+    want = probe_rows_ref(jnp.asarray(probes), rows_k, rows_v)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bucket_width", [8, 128])
+@pytest.mark.parametrize("m", [3, 40])
+def test_stream_kernel_shape_sweep(bucket_width, m):
+    keys, t = _table(100, bucket_width)
+    rng = np.random.default_rng(m)
+    probes = rng.choice(400, m).astype(np.int32)
+    bids = hash_bucket(jnp.asarray(probes), t.num_buckets, t.hash_mode)
+    got = bucket_probe_stream(t.keys, t.values, jnp.asarray(probes), bids,
+                              block_pb=16, interpret=True)
+    want = bucket_probe_ref(t.keys, t.values, jnp.asarray(probes), bids)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("schedule", ["gathered", "stream"])
+@pytest.mark.parametrize("hash_mode", ["identity", "fibonacci"])
+def test_probe_table_vs_ref(schedule, hash_mode):
+    keys, t = _table(150, 64, hash_mode=hash_mode)
+    rng = np.random.default_rng(7)
+    probes = jnp.asarray(rng.choice(600, 130).astype(np.int32))
+    got = probe_table(t, probes, schedule=schedule, block_pb=32)
+    want = probe_table_ref(t, probes)
+    np.testing.assert_array_equal(np.asarray(got.found),
+                                  np.asarray(want.found))
+    f = np.asarray(want.found)
+    np.testing.assert_array_equal(np.asarray(got.payload)[f],
+                                  np.asarray(want.payload)[f])
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=64))
+@settings(max_examples=15)
+def test_kernel_property_random_probes(probes):
+    keys, t = _table(64, 32, seed=3)
+    p = jnp.asarray(np.asarray(probes, np.int32))
+    got = probe_table(t, p, block_pb=16)
+    found = np.asarray(got.found)
+    assert np.array_equal(found, np.isin(np.asarray(probes), keys))
+    # payload = build row index of the (unique) key
+    pay = np.asarray(got.payload)
+    for i, k in enumerate(probes):
+        if found[i]:
+            assert keys[pay[i]] == k
+
+
+def test_empty_key_probe_never_matches():
+    keys, t = _table(32, 16)
+    p = jnp.asarray([int(EMPTY_KEY)], jnp.int32)
+    got = probe_table(t, p, block_pb=8)
+    assert not bool(got.found[0])
+
+
+@pytest.mark.parametrize("window", [2, 4, 8])
+@pytest.mark.parametrize("m,block", [(16, 8), (100, 32), (257, 64)])
+def test_coalesce_window_kernel_matches_oracle(window, m, block):
+    """The RLU 8-entry optimization-buffer kernel vs the jnp oracle."""
+    from repro.core.dedup import windowed_coalesce_mask
+    from repro.kernels.coalesce_window import coalesce_window_mask
+    rng = np.random.default_rng(m + window)
+    keys = jnp.asarray(rng.choice(12, m).astype(np.int32))  # dup-heavy
+    got = coalesce_window_mask(keys, window=window, block=block,
+                               interpret=True)
+    want = windowed_coalesce_mask(keys, window=window)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,101 @@
+"""Per-arch smoke tests (assignment requirement): reduced config of the same
+family, one forward/train step on CPU, asserting shapes + no NaNs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs, smoke
+from repro.models import (decode_step, forward, init_caches, init_params,
+                          loss_fn, prefill)
+
+ARCHS = list_archs()
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, b=2, s=32):
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    img = (jax.random.normal(KEY, (b, cfg.n_image_tokens, cfg.d_model),
+                             jnp.float32) if cfg.n_image_tokens else None)
+    return tokens, img
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    for a in ARCHS:
+        cfg = get_config(a)
+        assert cfg.param_count() > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = smoke(arch)
+    params = init_params(cfg, KEY)
+    tokens, img = _inputs(cfg)
+    h = forward(cfg, params, tokens, img)
+    assert h.shape == (2, 32, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(h)))
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens, tokens, img))(params)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+@pytest.mark.parametrize("arch", ["kimi-k2-1t-a32b", "jamba-v0.1-52b",
+                                  "llama-3.2-vision-11b", "mamba2-780m",
+                                  "gemma-7b"])
+def test_decode_matches_prefill(arch):
+    """KV-cache / state decode replays the prompt to the same logits."""
+    cfg = smoke(arch)
+    params = init_params(cfg, KEY)
+    tokens, img = _inputs(cfg, s=16)
+    logits_p, pc = prefill(cfg, params, tokens, max_seq=24, image_embeds=img)
+    caches = init_caches(cfg, 2, 24, cfg.n_image_tokens)
+    if cfg.n_image_tokens:
+        caches = [p if cfg.pattern[i][0] == "xattn" else c
+                  for i, (p, c) in enumerate(zip(pc, caches))]
+    dec = jax.jit(decode_step, static_argnums=0)
+    lg = None
+    for t in range(16):
+        lg, caches = dec(cfg, params, caches, tokens[:, t:t + 1],
+                         jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_p),
+                               atol=2e-2, rtol=1e-3)
+
+
+def test_full_configs_match_assignment_table():
+    """Exact fields from the assignment block."""
+    c = get_config("kimi-k2-1t-a32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab_size) == \
+        (61, 7168, 64, 8, 163840)
+    assert c.moe.num_experts == 384 and c.moe.top_k == 8
+    c = get_config("gemma-7b")
+    assert c.head_dim == 256 and c.act == "geglu" and c.d_ff == 24576
+    c = get_config("qwen3-32b")
+    assert c.qk_norm and c.n_layers == 64 and c.d_ff == 25600
+    c = get_config("jamba-v0.1-52b")
+    mixers = [m for m, _ in c.pattern]
+    assert mixers.count("attn") == 1 and mixers.count("mamba") == 7
+    assert sum(f == "moe" for _, f in c.pattern) == 4  # every other layer
+    c = get_config("mamba2-780m")
+    assert c.is_attention_free and c.ssm.state_dim == 128
+    c = get_config("llama-3.2-vision-11b")
+    assert [m for m, _ in c.pattern].count("xattn") == 1  # every 5th
+    c = get_config("musicgen-large")
+    assert c.vocab_size == 2048 and c.n_kv_heads == 32
+
+
+def test_param_counts_match_names():
+    expect = {"kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+              "llama4-maverick-400b-a17b": (3.4e11, 4.5e11),
+              "qwen3-32b": (2.9e10, 3.6e10),
+              "jamba-v0.1-52b": (4.6e10, 5.6e10),
+              "mamba2-780m": (7e8, 9e8),
+              "musicgen-large": (2.5e9, 3.6e9)}
+    for a, (lo, hi) in expect.items():
+        n = get_config(a).param_count()
+        assert lo <= n <= hi, (a, n)
+    # active params match the -aXXb suffixes
+    assert 2.8e10 <= get_config("kimi-k2-1t-a32b").active_param_count() <= 3.6e10
+    assert 1.0e10 <= get_config("jamba-v0.1-52b").active_param_count() <= 1.4e10

@@ -1,0 +1,122 @@
+"""Optimizer (fp32 + int8 moments + grad compression) and checkpointing."""
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.optim import (OptConfig, apply_updates, init_opt_state,
+                         quantize_with_feedback, schedule)
+from repro.optim.adamw import _dequant, _quant
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _quadratic_trajectory(moment_dtype, steps=60):
+    cfg = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                    total_steps=steps, moment_dtype=moment_dtype)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5])}
+    state = init_opt_state(params, cfg)
+    target = jnp.asarray([1.0, 1.0, 1.0])
+    losses = []
+    for _ in range(steps):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state, _ = apply_updates(params, g, state, cfg)
+        losses.append(float(loss))
+    return losses, params
+
+
+def test_adamw_converges():
+    losses, params = _quadratic_trajectory("float32")
+    assert losses[-1] < 1e-2 * losses[0]
+
+
+def test_int8_moments_track_fp32():
+    l32, p32 = _quadratic_trajectory("float32")
+    l8, p8 = _quadratic_trajectory("int8")
+    assert l8[-1] < 1e-1 * l8[0]
+    np.testing.assert_allclose(np.asarray(p8["w"]), np.asarray(p32["w"]),
+                               atol=0.15)
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                max_size=300))
+@settings(max_examples=20)
+def test_blockwise_quant_bounded_error(vals):
+    x = jnp.asarray(np.asarray(vals, np.float32).reshape(1, -1))
+    q, s = _quant(x)
+    back = _dequant(q, s, x.shape)
+    # error bounded by half a quantization step per block
+    step = np.asarray(s).max()
+    assert float(jnp.max(jnp.abs(back - x))) <= step * 0.51 + 1e-6
+
+
+def test_grad_quant_error_feedback_unbiased():
+    """Error feedback: accumulated quantized grads converge to true sum."""
+    g = {"w": jnp.asarray(np.random.default_rng(0)
+                          .normal(size=512).astype(np.float32))}
+    err = {"w": jnp.zeros(512, jnp.float32)}
+    acc = jnp.zeros(512, jnp.float32)
+    for _ in range(50):
+        dq, err = quantize_with_feedback(g, err, 8)
+        acc = acc + dq["w"]
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g["w"]),
+                               atol=0.02)
+
+
+def test_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                    min_lr_frac=0.1)
+    assert float(schedule(cfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(schedule(cfg, jnp.int32(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(schedule(cfg, jnp.int32(100))) == pytest.approx(0.1,
+                                                                 rel=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": [jnp.ones((4,), jnp.int32), jnp.zeros((2, 2), jnp.bfloat16)]}
+
+
+def test_checkpoint_roundtrip():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 7, t)
+        assert latest_step(d) == 7
+        got = restore(d, 7, jax.eval_shape(lambda: t))
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_checkpoint_atomicity_ignores_tmp():
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 3, _tree())
+        os.makedirs(os.path.join(d, "step_00000009.tmp"))  # crashed save
+        assert latest_step(d) == 3
+
+
+def test_manager_keeps_last_k():
+    with tempfile.TemporaryDirectory() as d:
+        m = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            m.save(s, _tree())
+        steps = sorted(int(x.split("_")[1]) for x in os.listdir(d))
+        assert steps == [3, 4]
+
+
+def test_structure_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, _tree())
+        bad = {"a": jnp.zeros((2, 3))}
+        with pytest.raises(AssertionError):
+            restore(d, 1, jax.eval_shape(lambda: bad))

@@ -1,0 +1,99 @@
+"""End-to-end behaviour: the paper's system running as a whole.
+
+1. DB path: SSB star joins offloaded to the JSPIM engine produce exactly
+   the baseline answers, with the prebuilt index reused across queries.
+2. LM path: training with the JSPIM dedup-embedding reduces loss, is
+   bit-identical to the non-dedup path, survives a crash (checkpoint /
+   restart), and the straggler watchdog fires on an injected slow step.
+"""
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke
+from repro.engine import SSBEngine, generate_ssb
+from repro.models import forward, init_params, loss_fn
+from repro.optim import OptConfig
+from repro.train import Trainer, TrainerConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_ssb_flight_jspim_vs_baseline():
+    tables = generate_ssb(sf=0.02, seed=1)
+    ej = SSBEngine(tables, mode="jspim")
+    eb = SSBEngine(tables, mode="baseline")
+    # index built once, reused for the whole flight (paper §3.2.3)
+    ids = {d: id(t) for d, t in ej.indexes.items()}
+    for q in ("Q1.1", "Q2.1", "Q3.1", "Q4.1", "Q4.3"):
+        tj, _ = ej.run(q)
+        tb, _ = eb.run(q)
+        assert int(tj) == int(tb), q
+    assert {d: id(t) for d, t in ej.indexes.items()} == ids
+
+
+def test_dedup_embedding_bit_identical():
+    """The JSPIM dedup-gather is an exact rewrite, not an approximation."""
+    import dataclasses
+    cfg = smoke("minitron-4b")
+    params = init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (2, 64), 0, 40)  # heavy duplication
+    h1 = forward(cfg, params, tokens)
+    h2 = forward(dataclasses.replace(cfg, dedup_embed=False), params, tokens)
+    np.testing.assert_array_equal(np.asarray(h1, np.float32),
+                                  np.asarray(h2, np.float32))
+
+
+def test_train_crash_restart_continues():
+    cfg = smoke("qwen3-4b")
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=14)
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainerConfig(steps=14, global_batch=4, microbatches=2,
+                           seq_len=48, ckpt_every=4, log_every=100,
+                           ckpt_dir=d)
+        with pytest.raises(RuntimeError):
+            Trainer(cfg, opt, tc, log_fn=lambda s: None).run(fail_at_step=9)
+        res = Trainer(cfg, opt, tc, log_fn=lambda s: None).run()
+        assert len(res["losses"]) == 14 - 8  # resumed from step-8 checkpoint
+        assert np.isfinite(res["losses"][-1])
+        assert res["losses"][-1] < 7.0
+
+
+def test_straggler_watchdog_fires():
+    cfg = smoke("musicgen-large")
+    opt = OptConfig(lr=1e-3, warmup_steps=1, total_steps=12)
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainerConfig(steps=12, global_batch=2, microbatches=1,
+                           seq_len=32, ckpt_every=100, log_every=100,
+                           ckpt_dir=d, straggler_factor=3.0)
+        tr = Trainer(cfg, opt, tc, log_fn=lambda s: None)
+        orig = tr.train_step
+
+        calls = {"n": 0}
+
+        def slow_step(*a, **k):
+            calls["n"] += 1
+            if calls["n"] == 9:
+                time.sleep(1.5)  # injected straggler
+            return orig(*a, **k)
+
+        tr.train_step = slow_step
+        res = tr.run()
+        assert res["straggler_events"] >= 1
+
+
+def test_loss_decreases_with_jspim_paths_enabled():
+    cfg = smoke("qwen3-4b")  # dedup_embed on by default
+    opt = OptConfig(lr=2e-3, warmup_steps=2, total_steps=20)
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainerConfig(steps=20, global_batch=4, microbatches=1,
+                           seq_len=64, ckpt_every=100, log_every=100,
+                           ckpt_dir=d, zipf_s=1.2)
+        res = Trainer(cfg, opt, tc, log_fn=lambda s: None).run()
+        first = np.mean(res["losses"][:3])
+        last = np.mean(res["losses"][-3:])
+        assert last < first - 0.2, (first, last)
