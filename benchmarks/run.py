@@ -2,7 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV (host timings on this machine's
 single CPU device; ``derived`` columns carry the cycle-model numbers that
-reproduce the paper's tables at full scale).
+reproduce the paper's tables at full scale).  The SSB pipeline module also
+writes machine-readable ``BENCH_ssb.json`` (per-query wall times for
+baseline/pid/jspim × xla/pallas, cache-cold vs cache-warm) so the perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -10,11 +13,13 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import fig08_join_speedup, lm_integration, paper_tables
+    from benchmarks import (fig08_join_speedup, lm_integration, paper_tables,
+                            ssb_pipeline)
 
     print("name,us_per_call,derived")
     bad = 0
-    for mod in (fig08_join_speedup, paper_tables, lm_integration):
+    for mod in (fig08_join_speedup, paper_tables, ssb_pipeline,
+                lm_integration):
         try:
             for name, us, derived in mod.run():
                 print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,108 @@
+"""SSB query-pipeline benchmark → machine-readable ``BENCH_ssb.json``.
+
+Measures the full 13-query benchmark per engine flavor
+(baseline/pid/jspim × xla/pallas), cache-cold vs cache-warm, plus the seed
+per-query loop (eager, probe-per-query) as the fixed reference the fused
+pipeline is tracked against.  Written by ``benchmarks/run.py`` so the perf
+trajectory is recorded from this PR onward.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+
+from benchmarks.util import row
+from repro.engine import SSB_QUERIES, SSBEngine, generate_ssb
+
+FLAVORS = (("baseline", "xla"), ("pid", "xla"),
+           ("jspim", "xla"), ("jspim", "pallas"))
+
+
+def _time_once(fn) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+
+def _time_queries(run_one, names, reps: int) -> dict[str, float]:
+    """Per-query median wall seconds (block_until_ready)."""
+    out = {}
+    for q in names:
+        ts = sorted(_time_once(lambda: run_one(q)) for _ in range(reps))
+        out[q] = ts[len(ts) // 2]
+    return out
+
+
+def collect(sf: float = 0.02, seed: int = 0) -> dict:
+    tables = generate_ssb(sf=sf, seed=seed)
+    names = sorted(SSB_QUERIES)
+    report: dict = {
+        "benchmark": "ssb_pipeline",
+        "sf": sf,
+        "n_fact_rows": int(tables["lineorder"].n_rows),
+        "backend": jax.default_backend(),
+        "engines": {},
+    }
+
+    # --- the seed per-query loop: eager ops, re-probe every query ---------
+    e0 = SSBEngine(tables, mode="jspim")
+    for q in names:                       # one warmup pass (allocator etc.)
+        e0.run_eager(q)
+    seed_per_q = _time_queries(e0.run_eager, names, reps=3)
+    report["seed_loop"] = {"per_query_s": seed_per_q,
+                           "total_s": sum(seed_per_q.values())}
+
+    for mode, impl in FLAVORS:
+        reps = 1 if impl == "pallas" else 3  # interpret-mode pallas is slow
+        eng = SSBEngine(tables, mode=mode, probe_impl=impl)
+        # compile both program flavors first so timings are execute-only
+        eng.run_all(use_cache=False)
+        eng.run_all(use_cache=True)
+
+        def cold(q):
+            return eng.run(q, use_cache=False)  # fused probe→…→aggregate
+
+        cold_per_q = _time_queries(cold, names, reps=reps)
+        warm_per_q = _time_queries(lambda q: eng.run(q), names, reps=reps)
+
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng.run_all())
+        warm_total = time.perf_counter() - t0
+
+        report["engines"][f"{mode}/{impl}"] = {
+            "cold_per_query_s": cold_per_q,
+            "warm_per_query_s": warm_per_q,
+            "cold_total_s": sum(cold_per_q.values()),
+            "warm_total_s": warm_total,
+            "cache_info": eng.cache_info(),
+        }
+
+    jx = report["engines"]["jspim/xla"]
+    report["speedup_warm_vs_seed_loop"] = (
+        report["seed_loop"]["total_s"] / jx["warm_total_s"])
+    report["speedup_warm_vs_cold"] = (
+        jx["cold_total_s"] / jx["warm_total_s"])
+    return report
+
+
+def write_json(path: str = "BENCH_ssb.json", sf: float = 0.02) -> dict:
+    report = collect(sf=sf)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return report
+
+
+def run():
+    """CSV rows for the run.py orchestrator (also writes BENCH_ssb.json)."""
+    report = write_json()
+    rows = []
+    sl = report["seed_loop"]["total_s"]
+    rows.append(row("ssb/seed_loop_total", sl * 1e6, "reference"))
+    for flavor, r in sorted(report["engines"].items()):
+        rows.append(row(
+            f"ssb/{flavor}_warm_total", r["warm_total_s"] * 1e6,
+            f"cold_total_us={r['cold_total_s'] * 1e6:.0f};"
+            f"vs_seed={sl / r['warm_total_s']:.1f}x"))
+    return rows

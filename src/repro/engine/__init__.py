@@ -1,8 +1,11 @@
 """Column-store DB engine: the faithful reproduction surface (SSB, joins)."""
 from repro.engine.table import Table
 from repro.engine.ssb import generate_ssb
-from repro.engine.join import DimIndex, build_dim_index, join_pairs, lookup
+from repro.engine.join import (BuildStats, DimIndex, build_dim_index,
+                               join_pairs, lookup, lookup_filtered,
+                               sharded_lookup)
 from repro.engine.queries import SSB_QUERIES, SSBEngine
 
-__all__ = ["Table", "generate_ssb", "DimIndex", "build_dim_index",
-           "join_pairs", "lookup", "SSB_QUERIES", "SSBEngine"]
+__all__ = ["Table", "generate_ssb", "BuildStats", "DimIndex",
+           "build_dim_index", "join_pairs", "lookup", "lookup_filtered",
+           "sharded_lookup", "SSB_QUERIES", "SSBEngine"]

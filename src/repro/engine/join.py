@@ -4,6 +4,12 @@ A ``DimIndex`` is the paper's persistent auxiliary structure: dictionary +
 hash table + duplication list, built once per (dimension table, key column)
 and maintained across queries (§3.2.3).  Probes run through either the XLA
 path (compiled on any backend) or the Pallas kernels (TPU; interpret on CPU).
+
+Bucket geometry (DESIGN.md §2): ``build_dim_index`` targets a load factor
+and **auto-grows** the bucket count — if the fixed-shape build reports
+overflow (keys dropped because a bucket filled up), it retries with 2×
+buckets until the table is lossless.  The final geometry is reported in a
+``BuildStats`` struct carried statically on the index.
 """
 from __future__ import annotations
 
@@ -11,12 +17,31 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core import (Dictionary, JSPIMTable, build_dictionary, build_table,
                         encode, join as core_join, probe, probe_deduped,
                         suggest_num_buckets)
+from repro.core.hash_table import EMPTY_KEY
 from repro.core.lookup import JoinResult, ProbeResult
-from repro.kernels import probe_table
+from repro.kernels import probe_table, probe_table_filtered, slot_predicate
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildStats:
+    """Final geometry of a built index (static host-side metadata)."""
+
+    num_buckets: int
+    bucket_width: int
+    n_unique: int
+    n_build: int
+    overflow: int        # residual dropped entries (0 unless growth capped)
+    grow_retries: int    # times num_buckets was doubled to absorb overflow
+    load: float          # requested target load factor
+
+    @property
+    def achieved_load(self) -> float:
+        return self.n_unique / (self.num_buckets * self.bucket_width)
 
 
 @jax.tree_util.register_dataclass
@@ -24,6 +49,8 @@ from repro.kernels import probe_table
 class DimIndex:
     dictionary: Dictionary
     table: JSPIMTable
+    stats: BuildStats | None = dataclasses.field(
+        metadata={"static": True}, default=None)
 
 
 def _default_bucket_width() -> int:
@@ -35,17 +62,36 @@ def _default_bucket_width() -> int:
 
 
 def build_dim_index(dim_keys: jax.Array, *, bucket_width: int | None = None,
-                    load: float = 0.5) -> DimIndex:
+                    load: float = 0.5, max_grow_retries: int = 8) -> DimIndex:
     """Encode the build column, then build the unique-key hash table whose
-    values are dimension-row indices."""
+    values are dimension-row indices.
+
+    The build is lossless: on bucket overflow the bucket count is doubled
+    and the build retried (up to ``max_grow_retries`` times), so skewed or
+    adversarial key distributions can never silently drop index entries.
+    """
     bucket_width = bucket_width or _default_bucket_width()
     n = int(dim_keys.shape[0])
     d = build_dictionary(dim_keys, capacity=n)
     codes = encode(d, dim_keys)
     nb = suggest_num_buckets(n, bucket_width, load)
-    tbl = build_table(codes, jnp.arange(n, dtype=jnp.int32),
-                      num_buckets=nb, bucket_width=bucket_width)
-    return DimIndex(dictionary=d, table=tbl)
+    retries = 0
+    while True:
+        tbl = build_table(codes, jnp.arange(n, dtype=jnp.int32),
+                          num_buckets=nb, bucket_width=bucket_width)
+        if isinstance(tbl.overflow, jax.core.Tracer):
+            # under jit the data-dependent grow loop can't run (fixed
+            # shapes); keep the single-pass build, no stats
+            return DimIndex(dictionary=d, table=tbl, stats=None)
+        if int(tbl.overflow) == 0 or retries >= max_grow_retries:
+            break
+        nb *= 2
+        retries += 1
+    stats = BuildStats(num_buckets=nb, bucket_width=bucket_width,
+                       n_unique=int(tbl.n_unique), n_build=n,
+                       overflow=int(tbl.overflow), grow_retries=retries,
+                       load=load)
+    return DimIndex(dictionary=d, table=tbl, stats=stats)
 
 
 def lookup(index: DimIndex, fact_keys: jax.Array, *, impl: str = "xla",
@@ -59,6 +105,63 @@ def lookup(index: DimIndex, fact_keys: jax.Array, *, impl: str = "xla",
     if deduped:
         return probe_deduped(index.table, codes)
     return probe(index.table, codes)
+
+
+def lookup_filtered(index: DimIndex, fact_keys: jax.Array,
+                    dim_mask: jax.Array, *, impl: str = "xla") -> ProbeResult:
+    """Fused probe + dimension-predicate filter (§4.1.5 filter-on-the-fly).
+
+    ``dim_mask`` is a boolean per dimension row.  The predicate is
+    pre-evaluated per hash-table slot (cheap: dimension tables are small)
+    and applied during the probe itself, so ``found`` is already the joined
+    *and filtered* match bit.  Duplication-group slots pass through and must
+    be filtered after CSR expansion (PK dimensions have none).
+
+    Only the gathered schedule has a fused kernel; ``pallas_stream`` keeps
+    its per-probe DMA schedule and applies the predicate afterwards.
+    """
+    codes = encode(index.dictionary, fact_keys)
+    if impl == "pallas":
+        pred = slot_predicate(index.table, dim_mask)
+        return probe_table_filtered(index.table, codes, pred)
+    if impl == "pallas_stream":
+        pr = probe_table(index.table, codes, schedule="stream")
+    else:
+        pr = probe(index.table, codes)
+    n = dim_mask.shape[0]
+    row_ok = dim_mask[jnp.clip(pr.payload, 0, n - 1)] & (pr.payload >= 0) \
+        & (pr.payload < n)
+    keep = jnp.where(pr.is_dup, True, row_ok)
+    return ProbeResult(pr.found & keep, pr.payload, pr.is_dup)
+
+
+def sharded_lookup(index: DimIndex, fact_keys: jax.Array,
+                   mesh: jax.sharding.Mesh, *, axis: str = "data"
+                   ) -> ProbeResult:
+    """Rank-parallel probe: replicate the (small) index, shard fact rows.
+
+    The TPU analogue of §3.3's rank-level parallelism: every device holds
+    the full hash dataset (one dimension table — tiny next to the fact
+    table) and probes its shard of the fact FK column, so the probe scales
+    linearly in device count with zero cross-device traffic.  Fact rows are
+    padded to a multiple of the axis size with EMPTY_KEY (never matches).
+    """
+    from repro.launch import compat
+
+    ndev = mesh.shape[axis]
+    m = fact_keys.shape[0]
+    pad = (-m) % ndev
+    fk = jnp.pad(fact_keys.astype(jnp.int32), (0, pad),
+                 constant_values=int(EMPTY_KEY))
+
+    def probe_shard(idx: DimIndex, keys: jax.Array) -> ProbeResult:
+        codes = encode(idx.dictionary, keys)
+        return probe(idx.table, codes)
+
+    fn = compat.shard_map(probe_shard, mesh=mesh,
+                          in_specs=(P(), P(axis)), out_specs=P(axis))
+    pr = fn(index, fk)
+    return ProbeResult(pr.found[:m], pr.payload[:m], pr.is_dup[:m])
 
 
 def join_pairs(index: DimIndex, fact_keys: jax.Array, *, capacity: int,

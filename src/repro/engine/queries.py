@@ -10,6 +10,21 @@ Modes:
 Every query returns (total, groups) where ``groups`` is a dense vector over a
 small composite group-key space (segment-summed revenue), so baseline/jspim
 agreement is exact and testable.
+
+Execution pipeline (DESIGN.md §4):
+
+  * **Cross-query probe cache** — fact FK columns are query-independent, so
+    each dimension is probed once per engine and the (found, dim_row) pair
+    is reused by every query that touches the dimension.  The §3.2.3 update
+    commands (``entry_update`` / ``index_update`` / ``table_update``) go
+    through the engine and invalidate the affected dimension's cache entry.
+  * **Fused per-query programs** — each ``QuerySpec`` compiles (once) into a
+    single jitted filter→mask→measure→segment-sum program consuming the
+    cached probes, so a warm query is one XLA dispatch.  A second "full"
+    flavor folds the probe itself (and, on the Pallas path, the fused
+    probe+predicate kernel) into the same program for cache-cold runs.
+  * **run_all** — the batched entry point: probes each dimension at most
+    once and executes all 13 compiled programs against the shared cache.
 """
 from __future__ import annotations
 
@@ -20,8 +35,11 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import hash_table as _ht
+from repro.core.dictionary import encode
 from repro.engine import baselines
-from repro.engine.join import DimIndex, build_dim_index, lookup
+from repro.engine.join import (DimIndex, build_dim_index, lookup,
+                               lookup_filtered)
 from repro.engine.table import Table
 
 FACT_FK = {"customer": "custkey", "supplier": "suppkey",
@@ -37,6 +55,10 @@ class QuerySpec:
     fact_filter: Callable[[Table], jax.Array] | None
     measure: Callable[[Table], jax.Array]
     group_by: tuple[tuple[str, str, int], ...] = ()  # (dim, col, cardinality)
+
+    def joined_dims(self) -> tuple[str, ...]:
+        return tuple(sorted(set(self.dim_filters)
+                            | {d for d, _, _ in self.group_by}))
 
 
 def _between(col, lo, hi):
@@ -90,44 +112,103 @@ _q("Q1.3", {"date": lambda t: (t["weeknuminyear"] == 6) & (t["year"] == 1994)},
    _discounted)
 # --- Q2.x: part ⋈ supplier ⋈ date ----------------------------------------
 _q("Q2.1", {"part": _eq("category", 12), "supplier": _eq("region", 1)},
-   None, _rev, [("date", "year", 2000), ("part", "brand", 1000)])
+   None, _rev, [("date", "year", 7), ("part", "brand", 1000)])
 _q("Q2.2", {"part": _between("brand", 260, 267), "supplier": _eq("region", 2)},
-   None, _rev, [("date", "year", 2000), ("part", "brand", 1000)])
+   None, _rev, [("date", "year", 7), ("part", "brand", 1000)])
 _q("Q2.3", {"part": _eq("brand", 260), "supplier": _eq("region", 3)},
-   None, _rev, [("date", "year", 2000), ("part", "brand", 1000)])
+   None, _rev, [("date", "year", 7), ("part", "brand", 1000)])
 # --- Q3.x: customer ⋈ supplier ⋈ date -------------------------------------
 _q("Q3.1", {"customer": _eq("region", 2), "supplier": _eq("region", 2),
             "date": _between("year", 1992, 1997)},
    None, _rev, [("customer", "nation", 25), ("supplier", "nation", 25),
-                ("date", "year", 2000)])
+                ("date", "year", 7)])
 _q("Q3.2", {"customer": _eq("nation", 14), "supplier": _eq("nation", 14),
             "date": _between("year", 1992, 1997)},
    None, _rev, [("customer", "city", 250), ("supplier", "city", 250),
-                ("date", "year", 2000)])
+                ("date", "year", 7)])
 _q("Q3.3", {"customer": _in("city", (141, 145)), "supplier": _in("city", (141, 145)),
             "date": _between("year", 1992, 1997)},
    None, _rev, [("customer", "city", 250), ("supplier", "city", 250),
-                ("date", "year", 2000)])
+                ("date", "year", 7)])
 _q("Q3.4", {"customer": _in("city", (141, 145)), "supplier": _in("city", (141, 145)),
             "date": _eq("yearmonthnum", 199712)},
    None, _rev, [("customer", "city", 250), ("supplier", "city", 250),
-                ("date", "year", 2000)])
+                ("date", "year", 7)])
 # --- Q4.x: all four dims ----------------------------------------------------
 _q("Q4.1", {"customer": _eq("region", 1), "supplier": _eq("region", 1),
             "part": _in("mfgr", (0, 1))},
-   None, _profit, [("date", "year", 2000), ("customer", "nation", 25)])
+   None, _profit, [("date", "year", 7), ("customer", "nation", 25)])
 _q("Q4.2", {"customer": _eq("region", 1), "supplier": _eq("region", 1),
             "part": _in("mfgr", (0, 1)), "date": _in("year", (1997, 1998))},
-   None, _profit, [("date", "year", 2000), ("supplier", "nation", 25),
+   None, _profit, [("date", "year", 7), ("supplier", "nation", 25),
                    ("part", "category", 25)])
 _q("Q4.3", {"customer": _eq("region", 1), "supplier": _eq("nation", 6),
             "part": _eq("category", 3), "date": _in("year", (1997, 1998))},
-   None, _profit, [("date", "year", 2000), ("supplier", "city", 250),
+   None, _profit, [("date", "year", 7), ("supplier", "city", 250),
                    ("part", "brand", 1000)])
 
 
+# ---------------------------------------------------------------------------
+# jitted probe primitives (shared across engines; cached by jax by shapes)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def _jspim_probe(index: DimIndex, fk: jax.Array, impl: str = "xla"):
+    pr = lookup(index, fk, impl=impl)
+    return pr.found, jnp.where(pr.found, pr.payload, -1)
+
+
+@jax.jit
+def _sort_merge_probe(fk: jax.Array, dk: jax.Array):
+    return baselines.sort_merge_join_unique(fk, dk)
+
+
+@jax.jit
+def _pid_probe(fk: jax.Array, dk: jax.Array):
+    return baselines.partitioned_hash_join_unique(fk, dk)
+
+
+def _filter_aggregate(spec: QuerySpec, fact_cols, dim_cols, probes):
+    """Shared tail of every query program: filter-on-the-fly → mask →
+    measure → segment-sum.  ``probes[dim] = (found, dim_row)``."""
+    fact = Table(fact_cols)
+    n_rows = fact.n_rows
+    mask = jnp.ones((n_rows,), bool)
+    rows: dict[str, jax.Array] = {}
+    for dim in spec.joined_dims():
+        found, r = probes[dim]
+        rows[dim] = r
+        mask = mask & found
+        if dim in spec.dim_filters:
+            dmask = spec.dim_filters[dim](Table(dim_cols[dim]))
+            # filter-on-the-fly while streaming results (paper §4.1.5)
+            mask = mask & dmask[jnp.clip(r, 0, dmask.shape[0] - 1)]
+    if spec.fact_filter is not None:
+        mask = mask & spec.fact_filter(fact)
+    measure = spec.measure(fact)
+    total = jnp.sum(jnp.where(mask, measure.astype(jnp.int32), 0))
+    if not spec.group_by:
+        return total, total[None]
+    # dense composite group key (small spaces by construction)
+    gk = jnp.zeros((n_rows,), jnp.int32)
+    size = 1
+    for dim, col, card in spec.group_by:
+        c = dim_cols[dim][col]
+        v = c[jnp.clip(rows[dim], 0, c.shape[0] - 1)] % card
+        gk = gk * card + v
+        size *= card
+    groups = jax.ops.segment_sum(
+        jnp.where(mask, measure.astype(jnp.int32), 0),
+        jnp.where(mask, gk, 0), num_segments=size)
+    return total, groups
+
+
 class SSBEngine:
-    """Executes SSB queries with joins delegated to the selected engine."""
+    """Executes SSB queries with joins delegated to the selected engine.
+
+    ``probe_impl``: "xla" | "pallas" | "pallas_stream" (jspim mode only).
+    """
 
     def __init__(self, tables: dict[str, Table], mode: str = "jspim",
                  probe_impl: str = "xla"):
@@ -139,9 +220,171 @@ class SSBEngine:
             # built once, reused across queries (§3.2.3 persistence)
             for dim, pk in DIM_PK.items():
                 self.indexes[dim] = build_dim_index(tables[dim][pk])
+        # cross-query probe cache: dim -> (found, dim_row) over fact rows
+        self._probe_cache: dict[str, tuple[jax.Array, jax.Array]] = {}
+        self._hits = 0
+        self._misses = 0
+        self._invalidations = 0
+        # compiled per-query programs, keyed by query name
+        self._cached_programs: dict[str, Callable] = {}
+        self._full_programs: dict[str, Callable] = {}
+
+    @property
+    def build_stats(self):
+        """Final index geometry per dimension (jspim mode)."""
+        return {d: ix.stats for d, ix in self.indexes.items()}
 
     # -- join primitive: (found, dim_row) per fact row ---------------------
     def _join(self, dim: str) -> tuple[jax.Array, jax.Array]:
+        fact = self.tables["lineorder"]
+        fk = fact[FACT_FK[dim]]
+        if self.mode == "jspim":
+            return _jspim_probe(self.indexes[dim], fk, impl=self.probe_impl)
+        dk = self.tables[dim][DIM_PK[dim]]
+        if self.mode == "baseline":
+            return _sort_merge_probe(fk, dk)
+        if self.mode == "pid":
+            return _pid_probe(fk, dk)
+        raise ValueError(self.mode)
+
+    # -- cross-query probe cache ------------------------------------------
+    def probe_dim(self, dim: str) -> tuple[jax.Array, jax.Array]:
+        """Cached (found, dim_row) for one dimension (probe once, reuse)."""
+        hit = self._probe_cache.get(dim)
+        if hit is not None:
+            self._hits += 1
+            return hit
+        self._misses += 1
+        out = self._join(dim)
+        # never capture tracers (engine used under an outer jit trace)
+        if not isinstance(out[0], jax.core.Tracer):
+            self._probe_cache[dim] = out
+        return out
+
+    def warm_cache(self, dims=None) -> None:
+        """Probe every (or the given) dimension into the cache up front."""
+        for dim in (dims if dims is not None else DIM_PK):
+            self.probe_dim(dim)
+
+    def invalidate_probe_cache(self, dim: str | None = None) -> None:
+        """Drop cached probes — all dims, or one (after an index update)."""
+        if dim is None:
+            self._invalidations += len(self._probe_cache)
+            self._probe_cache.clear()
+        elif dim in self._probe_cache:
+            self._invalidations += 1
+            del self._probe_cache[dim]
+
+    def cache_info(self) -> dict:
+        return {"hits": self._hits, "misses": self._misses,
+                "invalidations": self._invalidations,
+                "cached_dims": sorted(self._probe_cache)}
+
+    # -- §3.2.3 update commands (invalidate the affected dim's probes) -----
+    def _replace_table(self, dim: str, table) -> None:
+        self.indexes[dim] = dataclasses.replace(self.indexes[dim],
+                                                table=table)
+        self.invalidate_probe_cache(dim)
+
+    def entry_update(self, dim: str, bucket, slot, key, value_word) -> None:
+        """Entry Update: overwrite one (bucket, slot) cell of ``dim``.
+
+        This is the paper's raw DRAM-cell write: ``key`` is a stored
+        dictionary *code* (or EMPTY_KEY), not a raw dimension key."""
+        self._replace_table(dim, _ht.entry_update(
+            self.indexes[dim].table, bucket, slot, key, value_word))
+
+    def index_update(self, dim: str, key, new_payload) -> None:
+        """Index Update: search raw ``key`` in ``dim``; update its payload.
+
+        The table is keyed by dictionary codes, so the raw key is encoded
+        first; an absent key encodes to NO_CODE and the update no-ops."""
+        code = encode(self.indexes[dim].dictionary,
+                      jnp.asarray(key, jnp.int32))
+        self._replace_table(dim, _ht.index_update(
+            self.indexes[dim].table, code, new_payload))
+
+    def table_update(self, dim: str, bucket_ids, new_keys,
+                     new_values) -> None:
+        """Table Update: burst-write whole buckets of ``dim``."""
+        self._replace_table(dim, _ht.table_update(
+            self.indexes[dim].table, bucket_ids, new_keys, new_values))
+
+    # -- compiled query programs ------------------------------------------
+    def _cached_program(self, name: str) -> Callable:
+        """Jitted filter→mask→aggregate consuming cached probes."""
+        prog = self._cached_programs.get(name)
+        if prog is None:
+            spec = SSB_QUERIES[name]
+            prog = jax.jit(partial(_filter_aggregate, spec))
+            self._cached_programs[name] = prog
+        return prog
+
+    def _full_program(self, name: str) -> Callable:
+        """One jitted probe→filter→mask→aggregate program (cache-cold path).
+
+        In jspim mode with a Pallas impl, dimensions that carry a predicate
+        probe through the fused probe+filter kernel — compare, tag-decode,
+        and dimension-filter in a single VMEM pass.
+        """
+        prog = self._full_programs.get(name)
+        if prog is not None:
+            return prog
+        spec = SSB_QUERIES[name]
+        mode, impl = self.mode, self.probe_impl
+        fuse_filter = mode == "jspim" and impl.startswith("pallas")
+
+        def program(fact_cols, dim_cols, indexes):
+            probes: dict[str, tuple[jax.Array, jax.Array]] = {}
+            for dim in spec.joined_dims():
+                fk = fact_cols[FACT_FK[dim]]
+                if mode == "jspim":
+                    if fuse_filter and dim in spec.dim_filters:
+                        dmask = spec.dim_filters[dim](Table(dim_cols[dim]))
+                        pr = lookup_filtered(indexes[dim], fk, dmask,
+                                             impl=impl)
+                    else:
+                        pr = lookup(indexes[dim], fk, impl=impl)
+                    probes[dim] = (pr.found,
+                                   jnp.where(pr.found, pr.payload, -1))
+                elif mode == "baseline":
+                    probes[dim] = baselines.sort_merge_join_unique(
+                        fk, dim_cols[dim][DIM_PK[dim]])
+                else:
+                    probes[dim] = baselines.partitioned_hash_join_unique(
+                        fk, dim_cols[dim][DIM_PK[dim]])
+            return _filter_aggregate(spec, fact_cols, dim_cols, probes)
+
+        prog = jax.jit(program)
+        self._full_programs[name] = prog
+        return prog
+
+    # -- execution ---------------------------------------------------------
+    def _dim_cols(self, spec: QuerySpec) -> dict:
+        return {d: dict(self.tables[d].columns) for d in spec.joined_dims()}
+
+    def run(self, name: str, *, use_cache: bool = True
+            ) -> tuple[jax.Array, jax.Array]:
+        """Execute one query as a single compiled program.
+
+        ``use_cache=True`` (default) consumes the cross-query probe cache;
+        ``use_cache=False`` runs the fully fused probe→…→aggregate program
+        without touching the cache (cold-path benchmark flavor).
+        """
+        spec = SSB_QUERIES[name]
+        fact_cols = dict(self.tables["lineorder"].columns)
+        dim_cols = self._dim_cols(spec)
+        if use_cache:
+            probes = {d: self.probe_dim(d) for d in spec.joined_dims()}
+            return self._cached_program(name)(fact_cols, dim_cols, probes)
+        if self.mode == "jspim":
+            idx = {d: self.indexes[d] for d in spec.joined_dims()}
+        else:
+            idx = {}
+        return self._full_program(name)(fact_cols, dim_cols, idx)
+
+    def _join_eager(self, dim: str) -> tuple[jax.Array, jax.Array]:
+        """Un-jitted flavor of ``_join`` (op-by-op dispatch, no caching)."""
         fact = self.tables["lineorder"]
         fk = fact[FACT_FK[dim]]
         if self.mode == "jspim":
@@ -154,35 +397,24 @@ class SSBEngine:
             return baselines.partitioned_hash_join_unique(fk, dk)
         raise ValueError(self.mode)
 
-    def run(self, name: str) -> tuple[jax.Array, jax.Array]:
+    def run_eager(self, name: str) -> tuple[jax.Array, jax.Array]:
+        """The seed per-query loop: un-jitted op-by-op dispatch, no cache.
+
+        Kept as the reference implementation (jit-vs-eager equality tests)
+        and as the benchmark baseline the fused pipeline is measured
+        against."""
         spec = SSB_QUERIES[name]
-        fact = self.tables["lineorder"]
-        mask = jnp.ones((fact.n_rows,), bool)
-        rows: dict[str, jax.Array] = {}
-        joined = set(spec.dim_filters) | {d for d, _, _ in spec.group_by}
-        for dim in sorted(joined):
-            found, r = self._join(dim)
-            rows[dim] = r
-            mask = mask & found
-            if dim in spec.dim_filters:
-                dmask = spec.dim_filters[dim](self.tables[dim])
-                # filter-on-the-fly while streaming results (paper §4.1.5)
-                mask = mask & dmask[jnp.clip(r, 0, dmask.shape[0] - 1)]
-        if spec.fact_filter is not None:
-            mask = mask & spec.fact_filter(fact)
-        measure = spec.measure(fact)
-        total = jnp.sum(jnp.where(mask, measure.astype(jnp.int32), 0))
-        if not spec.group_by:
-            return total, total[None]
-        # dense composite group key (small spaces by construction)
-        gk = jnp.zeros((fact.n_rows,), jnp.int32)
-        size = 1
-        for dim, col, card in spec.group_by:
-            c = self.tables[dim][col]
-            v = c[jnp.clip(rows[dim], 0, c.shape[0] - 1)] % card
-            gk = gk * card + v
-            size *= card
-        groups = jax.ops.segment_sum(
-            jnp.where(mask, measure.astype(jnp.int32), 0),
-            jnp.where(mask, gk, 0), num_segments=size)
-        return total, groups
+        probes = {d: self._join_eager(d) for d in spec.joined_dims()}
+        return _filter_aggregate(spec, dict(self.tables["lineorder"].columns),
+                                 self._dim_cols(spec), probes)
+
+    def run_all(self, names=None, *, use_cache: bool = True
+                ) -> dict[str, tuple[jax.Array, jax.Array]]:
+        """Batched entry point: all queries against the shared probe cache.
+
+        Probes each dimension at most once (cache-warm after the first
+        query that touches it), then executes every compiled program."""
+        out: dict[str, tuple[jax.Array, jax.Array]] = {}
+        for name in (names if names is not None else sorted(SSB_QUERIES)):
+            out[name] = self.run(name, use_cache=use_cache)
+        return out

@@ -1,7 +1,12 @@
 """Pallas TPU kernels for the JSPIM search engine + pure-jnp oracles."""
 from repro.kernels.coalesce_window import coalesce_window_mask
-from repro.kernels.ops import probe_table, probe_table_ref
-from repro.kernels.ref import NULL_WORD, bucket_probe_ref, probe_rows_ref, unpack_words
+from repro.kernels.ops import (probe_table, probe_table_filtered,
+                               probe_table_ref, slot_predicate)
+from repro.kernels.ref import (NULL_WORD, bucket_probe_ref,
+                               probe_filter_rows_ref, probe_rows_ref,
+                               unpack_words)
 
-__all__ = ["coalesce_window_mask", "probe_table", "probe_table_ref", "NULL_WORD",
-           "bucket_probe_ref", "probe_rows_ref", "unpack_words"]
+__all__ = ["coalesce_window_mask", "probe_table", "probe_table_filtered",
+           "probe_table_ref", "slot_predicate", "NULL_WORD",
+           "bucket_probe_ref", "probe_filter_rows_ref", "probe_rows_ref",
+           "unpack_words"]

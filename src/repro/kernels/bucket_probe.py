@@ -37,6 +37,13 @@ from repro.kernels.ref import NULL_WORD
 _EMPTY = -0x7FFFFFFF
 _NULL = -2
 
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """Auto-select: compiled on TPU, interpret everywhere else."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
 # --------------------------------------------------------------------------
 # Kernel A: comparator array over pre-activated rows
 # --------------------------------------------------------------------------
@@ -53,12 +60,14 @@ def _probe_rows_kernel(pk_ref, rk_ref, rv_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_pb", "interpret"))
 def probe_rows(probe_keys, rows_k, rows_v, *, block_pb: int = 256,
-               interpret: bool = True):
+               interpret: bool | None = None):
     """(m,), (m, W), (m, W) -> (m,) packed value words.
 
     m is padded to a multiple of ``block_pb``; W must be a multiple of 128
-    for compiled TPU mode (any W works in interpret mode).
+    for compiled TPU mode (any W works in interpret mode).  ``interpret``
+    defaults to backend auto-selection (compiled iff TPU).
     """
+    interpret = _resolve_interpret(interpret)
     m, w = rows_k.shape
     pb = min(block_pb, max(8, m))
     pad = (-m) % pb
@@ -100,12 +109,13 @@ def _stream_kernel(bids_ref, pk_ref, rk_ref, rv_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_pb", "interpret"))
 def bucket_probe_stream(table_keys, table_vals, probe_keys, bucket_ids, *,
-                        block_pb: int = 256, interpret: bool = True):
+                        block_pb: int = 256, interpret: bool | None = None):
     """Streaming probe: one bucket-row DMA ("activation") per probe.
 
     table_keys/table_vals: (B, W); probe_keys/bucket_ids: (m,).
     Returns (m,) packed value words.
     """
+    interpret = _resolve_interpret(interpret)
     m = probe_keys.shape[0]
     _, w = table_keys.shape
     pb = min(block_pb, max(8, m))
@@ -134,4 +144,65 @@ def bucket_probe_stream(table_keys, table_vals, probe_keys, bucket_ids, *,
         interpret=interpret,
         name="jspim_bucket_probe_stream",
     )(bids, pk, table_keys.astype(jnp.int32), table_vals.astype(jnp.int32))
+    return out[:m, 0]
+
+
+# --------------------------------------------------------------------------
+# Kernel C: fused comparator + tag-decode + dimension-predicate filter
+# --------------------------------------------------------------------------
+#
+# The §4.1.5 "filter-on-the-fly" realized *inside* the search engine: the
+# dimension predicate is pre-evaluated per hash-table slot (one XLA gather
+# over the small dimension table — see ``ops.slot_predicate``), and the
+# kernel consumes it as a third (PB, W) operand aligned with the value rows.
+# A probe whose matching slot fails the predicate emits NULL_WORD straight
+# from VMEM — the miss never materializes an (m,) row-index vector in HBM,
+# so compare, tag-decode, and dimension-filter are one VMEM pass.
+
+
+def _probe_filter_rows_kernel(pk_ref, rk_ref, rv_ref, rp_ref, out_ref):
+    pk = pk_ref[...]                       # (PB, 1)
+    match = rk_ref[...] == pk              # (PB, W) comparator array
+    found = jnp.any(match, axis=1, keepdims=True) & (pk != _EMPTY)
+    word = jnp.sum(jnp.where(match, rv_ref[...], 0), axis=1, keepdims=True)
+    # tag-decoded predicate bit of the matching slot (dup entries carry 1
+    # and are filtered post-expansion — see ops.slot_predicate)
+    pred = jnp.sum(jnp.where(match, rp_ref[...], 0), axis=1, keepdims=True) > 0
+    out_ref[...] = jnp.where(found & pred, word.astype(jnp.int32),
+                             jnp.int32(_NULL))
+
+
+@functools.partial(jax.jit, static_argnames=("block_pb", "interpret"))
+def probe_filter_rows(probe_keys, rows_k, rows_v, rows_p, *,
+                      block_pb: int = 256, interpret: bool | None = None):
+    """Fused probe+predicate: (m,), (m, W)x3 -> (m,) packed value words.
+
+    ``rows_p`` is the per-slot predicate plane gathered by the same bucket
+    ids as ``rows_k``/``rows_v`` (int32 0/1).  Output is NULL_WORD for both
+    misses and predicate-filtered matches.
+    """
+    interpret = _resolve_interpret(interpret)
+    m, w = rows_k.shape
+    pb = min(block_pb, max(8, m))
+    pad = (-m) % pb
+    pk = jnp.pad(probe_keys.astype(jnp.int32), (0, pad),
+                 constant_values=int(EMPTY_KEY))[:, None]
+    rk = jnp.pad(rows_k.astype(jnp.int32), ((0, pad), (0, 0)))
+    rv = jnp.pad(rows_v.astype(jnp.int32), ((0, pad), (0, 0)))
+    rp = jnp.pad(rows_p.astype(jnp.int32), ((0, pad), (0, 0)))
+    grid = ((m + pad) // pb,)
+    out = pl.pallas_call(
+        _probe_filter_rows_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((pb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((pb, w), lambda i: (i, 0)),
+            pl.BlockSpec((pb, w), lambda i: (i, 0)),
+            pl.BlockSpec((pb, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((pb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + pad, 1), jnp.int32),
+        interpret=interpret,
+        name="jspim_probe_filter_rows",
+    )(pk, rk, rv, rp)
     return out[:m, 0]

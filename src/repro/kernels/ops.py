@@ -16,10 +16,6 @@ from repro.core.lookup import ProbeResult
 from repro.kernels import bucket_probe, ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def probe_table(table: JSPIMTable, probe_keys: jax.Array, *,
                 schedule: str = "gathered",
                 block_pb: int = 256,
@@ -31,9 +27,10 @@ def probe_table(table: JSPIMTable, probe_keys: jax.Array, *,
         compare+select (high-throughput TPU path).
       * "stream"   — scalar-prefetched per-probe row DMA (faithful JSPIM
         streaming pipeline).
+
+    ``interpret=None`` lets the kernel auto-select by backend
+    (``bucket_probe._resolve_interpret``: compiled iff TPU).
     """
-    if interpret is None:
-        interpret = not _on_tpu()
     keys = probe_keys.astype(jnp.int32)
     bids = hash_bucket(keys, table.num_buckets, table.hash_mode)
     if schedule == "gathered":
@@ -49,6 +46,45 @@ def probe_table(table: JSPIMTable, probe_keys: jax.Array, *,
                                                  interpret=interpret)
     else:
         raise ValueError(f"unknown schedule {schedule!r}")
+    found, payload, is_dup = ref.unpack_words(words)
+    return ProbeResult(found, payload, is_dup)
+
+
+def slot_predicate(table: JSPIMTable, dim_mask: jax.Array) -> jax.Array:
+    """Pre-evaluate a dimension predicate per hash-table slot.
+
+    ``dim_mask`` is a (n_dim_rows,) boolean over the dimension table.  For a
+    unique-key slot (tag bit 0) the payload *is* the dimension row, so the
+    slot's predicate bit is ``dim_mask[payload]``.  Duplication-group slots
+    (tag bit 1) keep bit 1 — their rows live in the CPU-side CSR and are
+    filtered after expansion.  Returns (num_buckets, bucket_width) int32 0/1,
+    the third operand of the fused probe+filter kernel.
+    """
+    payload = table.values >> 1
+    is_dup = (table.values & 1).astype(bool)
+    n = dim_mask.shape[0]
+    hit = dim_mask[jnp.clip(payload, 0, n - 1)] & (payload >= 0) & (payload < n)
+    return jnp.where(is_dup, True, hit).astype(jnp.int32)
+
+
+def probe_table_filtered(table: JSPIMTable, probe_keys: jax.Array,
+                         slot_pred: jax.Array, *,
+                         block_pb: int = 256,
+                         interpret: bool | None = None) -> ProbeResult:
+    """Fused associative search + dimension filter (one VMEM pass).
+
+    ``found`` is True only for probes whose match also passes the predicate
+    plane — the §4.1.5 filter-on-the-fly folded into the comparator array.
+    ``interpret=None`` auto-selects by backend (compiled iff TPU).
+    """
+    keys = probe_keys.astype(jnp.int32)
+    bids = hash_bucket(keys, table.num_buckets, table.hash_mode)
+    rows_k = table.keys[bids]
+    rows_v = table.values[bids]
+    rows_p = slot_pred[bids]
+    words = bucket_probe.probe_filter_rows(keys, rows_k, rows_v, rows_p,
+                                           block_pb=block_pb,
+                                           interpret=interpret)
     found, payload, is_dup = ref.unpack_words(words)
     return ProbeResult(found, payload, is_dup)
 

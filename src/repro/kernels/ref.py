@@ -31,6 +31,21 @@ def bucket_probe_ref(table_keys, table_vals, probe_keys, bucket_ids):
     return probe_rows_ref(probe_keys, rows_k, rows_v)
 
 
+def probe_filter_rows_ref(probe_keys, rows_k, rows_v, rows_p):
+    """Fused probe+predicate semantics (§4.1.5 filter-on-the-fly).
+
+    ``rows_p`` carries one precomputed predicate bit per hash-table slot,
+    aligned with ``rows_v`` (see ``slot_predicate``).  A probe that matches a
+    slot whose predicate bit is 0 returns NULL_WORD directly — the match is
+    filtered before it is ever streamed back.
+    """
+    match = rows_k == probe_keys[:, None]
+    found = match.any(axis=1) & (probe_keys != EMPTY_KEY)
+    word = jnp.sum(jnp.where(match, rows_v, 0), axis=1).astype(jnp.int32)
+    pred = jnp.sum(jnp.where(match, rows_p, 0), axis=1) > 0
+    return jnp.where(found & pred, word, NULL_WORD)
+
+
 def unpack_words(words):
     """Packed value word -> (found, payload, is_dup)."""
     found = words != NULL_WORD

@@ -1,0 +1,86 @@
+"""JAX version compatibility layer (new mesh API on old jaxlib).
+
+The framework is written against the post-0.6 mesh surface
+(``jax.set_mesh`` / ``jax.sharding.get_abstract_mesh`` / ``jax.shard_map``
+with ``axis_names=`` / ``axis_types=`` meshes).  Container images pin older
+jaxlibs, where the same machinery exists under the legacy names
+(``with mesh:`` thread resources, ``jax.experimental.shard_map`` with
+``auto=``).  Everything in-repo goes through this module so the rest of the
+code can be written once against the modern surface.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Sequence
+
+import jax
+
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    """jax.make_mesh with Auto axis types where the kwarg exists."""
+    if _HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def set_mesh(mesh: jax.sharding.Mesh):
+    """Context manager activating ``mesh`` for sharding-constraint lookup."""
+    if _HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    # legacy: entering the Mesh sets the thread-resources physical mesh
+    return mesh
+
+
+def get_mesh():
+    """The active mesh (abstract or physical), or None."""
+    if _HAS_ABSTRACT_MESH:
+        m = jax.sharding.get_abstract_mesh()
+        return m if (m is not None and not m.empty) else None
+    from jax._src import mesh as mesh_lib
+    try:
+        m = mesh_lib.thread_resources.env.physical_mesh
+    except AttributeError:  # pragma: no cover - very old jax
+        return None
+    return m if (m is not None and not m.empty) else None
+
+
+def mesh_axis_names() -> tuple[str, ...]:
+    m = get_mesh()
+    return tuple(m.axis_names) if m is not None else ()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: set[str] | frozenset[str] | None = None,
+              check: bool = False):
+    """``jax.shard_map`` when available, else the experimental one.
+
+    ``axis_names`` restricts which mesh axes are manual (the rest stay
+    automatic) — mapped onto the legacy ``auto=`` complement set.
+    """
+    if hasattr(jax, "shard_map"):
+        kw: dict[str, Any] = {"check_vma": check}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {"check_rep": check}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+@contextlib.contextmanager
+def activate(mesh: jax.sharding.Mesh):
+    """``with activate(mesh):`` — uniform spelling for either API."""
+    cm = set_mesh(mesh)
+    with cm:
+        yield mesh

@@ -33,7 +33,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, list_archs, shape_applicable
 from repro.configs.shapes import SHAPES, input_specs
-from repro.launch import roofline
+from repro.launch import compat, roofline
 from repro.launch.mesh import dp_size, make_production_mesh
 from repro.launch.sharding import param_specs, resolve
 from repro.models.transformer import (decode_step, init_caches, init_params,
@@ -190,7 +190,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
     key = jax.random.PRNGKey(0)
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with compat.activate(mesh):
         p_shape = jax.eval_shape(lambda k: init_params(cfg, k), key)
         p_specs = jax.tree.map(
             lambda leaf, s: _sanitize(s, leaf.shape, mesh),

@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.launch import compat
 from repro.launch.sharding import param_specs
 
 
@@ -33,7 +34,7 @@ def _sanitize(spec: P, shape, mesh) -> P:
 
 def reshard_params(params, new_mesh: jax.sharding.Mesh):
     """Place a (restored) params pytree onto a new mesh per the rules."""
-    with jax.set_mesh(new_mesh):
+    with compat.activate(new_mesh):
         specs = jax.tree.map(
             lambda leaf, s: _sanitize(s, leaf.shape, new_mesh),
             params, param_specs(params))

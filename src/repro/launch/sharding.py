@@ -16,10 +16,7 @@ from typing import Any
 import jax
 from jax.sharding import PartitionSpec as P
 
-
-def _mesh_axes() -> tuple[str, ...]:
-    m = jax.sharding.get_abstract_mesh()
-    return tuple(m.axis_names) if (m is not None and not m.empty) else ()
+from repro.launch.compat import mesh_axis_names as _mesh_axes
 
 
 def resolve(logical: Any, mesh_axes: tuple[str, ...]) -> Any:

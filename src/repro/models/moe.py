@@ -20,6 +20,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.launch import compat
 from repro.launch.sharding import constrain
 from repro.models.config import ModelConfig, MoEConfig
 from repro.models.layers import dense_init
@@ -108,8 +109,8 @@ def moe_ffn(p: MoEParams, cfg: ModelConfig, x: jax.Array,
 
 
 def _dp_axes() -> tuple[str, ...]:
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or m.empty:
+    m = compat.get_mesh()
+    if m is None:
         return ()
     return tuple(a for a in ("pod", "data") if a in m.axis_names)
 
@@ -178,7 +179,7 @@ def _moe_ffn_grouped(p: MoEParams, cfg: ModelConfig, x: jax.Array,
             mc.num_experts, cap, d)
 
     dp = _dp_axes()
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_mesh()
     has_model = bool(dp) and "model" in mesh.axis_names
     tp_size = mesh.shape["model"] if has_model else 1
 
@@ -209,7 +210,7 @@ def _grouped_manual(p, cfg, x, act, groups, xg, gates, topi, cap, ng, k,
     from jax.sharding import PartitionSpec as P
     mc = cfg.moe
     b, s, d = x.shape
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_mesh()
     has_model = "model" in mesh.axis_names
     e_local = mc.num_experts // tp_size
     axes = set(dp) | ({"model"} if has_model else set())
@@ -217,9 +218,9 @@ def _grouped_manual(p, cfg, x, act, groups, xg, gates, topi, cap, ng, k,
     BUF = P(dp, "model" if has_model else None, None, None)
 
     def _manual(fn, in_specs, out_specs):
-        return jax.shard_map(jax.vmap(fn), mesh=mesh, axis_names=axes,
-                             check_vma=False, in_specs=in_specs,
-                             out_specs=out_specs)
+        return compat.shard_map(jax.vmap(fn), mesh=mesh, axis_names=axes,
+                                check=False, in_specs=in_specs,
+                                out_specs=out_specs)
 
     def _e0():
         return (jax.lax.axis_index("model") * e_local if has_model

@@ -1,0 +1,136 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The container bakes a fixed dependency set; ``hypothesis`` may be absent.
+Rather than skipping every property test, this shim replays each ``@given``
+test over a fixed number of pseudo-random examples drawn from a seeded
+``random.Random``, so property tests keep running (deterministically) with
+zero extra dependencies.  Only the strategy surface this repo uses is
+implemented: ``integers``, ``floats``, ``lists``.
+
+Installed by ``conftest.py`` via ``sys.modules`` *only* when the real
+package is missing, so a developer machine with hypothesis installed gets
+the real shrinking engine.
+"""
+from __future__ import annotations
+
+import math
+import random
+import sys
+import types
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, *, allow_nan: bool = True,
+           allow_infinity: bool = True) -> Strategy:
+    del allow_nan, allow_infinity  # bounded draws are always finite
+
+    def draw(rng: random.Random):
+        # bias towards the endpoints — cheap substitute for shrinking
+        r = rng.random()
+        if r < 0.05:
+            return float(min_value)
+        if r < 0.1:
+            return float(max_value)
+        return rng.uniform(min_value, max_value)
+
+    return Strategy(draw)
+
+
+def lists(elements: Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> Strategy:
+    def draw(rng: random.Random):
+        # log-uniform size draw hits both tiny and large lists
+        lo, hi = max(min_size, 0), max(max_size, min_size)
+        span = math.log(hi + 1) - math.log(lo + 1)
+        n = int(math.exp(math.log(lo + 1) + rng.random() * span)) - 1
+        n = min(max(n, lo), hi)
+        return [elements.draw(rng) for _ in range(n)]
+
+    return Strategy(draw)
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+class settings:
+    """Mimics both the decorator and the profile registry."""
+
+    _profiles: dict[str, dict] = {}
+    _active: dict = {"max_examples": DEFAULT_MAX_EXAMPLES}
+
+    def __init__(self, max_examples: int | None = None, **kw):
+        self.max_examples = max_examples
+        self.kw = kw
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, max_examples: int | None = None,
+                         **kw):
+        cls._profiles[name] = {"max_examples": max_examples
+                               or DEFAULT_MAX_EXAMPLES, **kw}
+
+    @classmethod
+    def load_profile(cls, name: str):
+        cls._active = cls._profiles.get(
+            name, {"max_examples": DEFAULT_MAX_EXAMPLES})
+
+
+def given(*strategies: Strategy):
+    def deco(fn):
+        s = getattr(fn, "_fallback_settings", None)
+        n = (s.max_examples if s is not None and s.max_examples
+             else settings._active.get("max_examples", DEFAULT_MAX_EXAMPLES))
+
+        def wrapper(*args, **kwargs):
+            rng = random.Random(f"jspim::{fn.__module__}.{fn.__qualname__}")
+            for i in range(n):
+                drawn = tuple(st.draw(rng) for st in strategies)
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as e:  # pragma: no cover - failure path
+                    raise AssertionError(
+                        f"falsifying example (#{i}): {drawn!r}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return deco
+
+
+def install() -> types.ModuleType:
+    """Register this shim as ``hypothesis`` (+ ``hypothesis.strategies``)."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = HealthCheck
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.lists = lists
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+    return mod

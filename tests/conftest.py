@@ -11,7 +11,18 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import warnings
 
 import pytest
-from hypothesis import HealthCheck, settings
+
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:  # container image ships without hypothesis
+    import os.path
+    import sys
+
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_fallback import install
+
+    install()
+    from hypothesis import HealthCheck, settings
 
 warnings.filterwarnings("ignore", category=UserWarning)
 warnings.filterwarnings("ignore", category=DeprecationWarning)

@@ -22,6 +22,7 @@ sys.path.insert(0, sys_path)
 
 from repro.configs import smoke
 from repro.data import ZipfTokenStream, shard_batch
+from repro.launch import compat
 from repro.launch.elastic import reshard_params
 from repro.launch.sharding import param_specs
 from repro.models import init_params
@@ -31,14 +32,13 @@ from repro.train.step import make_train_step
 
 out = {{}}
 assert len(jax.devices()) == 8
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 cfg = smoke("qwen3-4b")
 key = jax.random.PRNGKey(0)
 opt_cfg = OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
 
-with jax.set_mesh(mesh):
+with compat.activate(mesh):
     params = init_params(cfg, key)
     specs = param_specs(params)
     p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
@@ -59,13 +59,13 @@ with jax.set_mesh(mesh):
                   params["blocks"][0]["ffn"]["w_in"]])
 
 # compressed cross-pod psum matches exact psum
-from jax.experimental.shard_map import shard_map
 g = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8) / 7.0}}
 gs = jax.device_put(g, jax.tree.map(
     lambda _: NamedSharding(mesh, P(("pod",))), g))
 def f(t):
     return psum_compressed(t, "pod")
-fm = shard_map(f, mesh=mesh, in_specs=(P(("pod",)),), out_specs=P(("pod",)))
+fm = compat.shard_map(f, mesh=mesh, in_specs=(P(("pod",)),),
+                      out_specs=P(("pod",)), check=True)
 got = fm(gs["w"])
 # exact: every pod shard holds the sum over pods of its slice
 exact = jnp.concatenate([g["w"][:4] + g["w"][4:]] * 2, axis=0)
@@ -76,7 +76,7 @@ import dataclasses
 from repro.models import loss_fn as _loss_fn
 kcfg0 = smoke("kimi-k2-1t-a32b")
 ktok = jax.random.randint(key, (4, 32), 0, kcfg0.vocab_size)
-with jax.set_mesh(mesh):
+with compat.activate(mesh):
     kp = init_params(kcfg0, key)
     vals = {{}}
     for g in (1, 4):
@@ -93,8 +93,7 @@ with jax.set_mesh(mesh):
                         jax.tree.leaves(vals[4][1])))
 
 # elastic: reshard onto a smaller mesh
-small = jax.make_mesh((2, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+small = compat.make_mesh((2, 2), ("data", "model"))
 host_params = jax.tree.map(lambda x: np.asarray(x), params)
 re = reshard_params(host_params, small)
 out["elastic_ok"] = all(

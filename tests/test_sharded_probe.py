@@ -1,0 +1,76 @@
+"""Sharded probe (shard_map) on simulated CPU devices (subprocess — keeps
+the main test process at 1 device as required by conftest)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import sys
+sys.path.insert(0, {src!r})
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.engine import build_dim_index, generate_ssb, lookup, sharded_lookup
+from repro.launch import compat
+
+out = {{}}
+assert len(jax.devices()) >= 2
+tables = generate_ssb(sf=0.01, seed=0)
+
+for ndev in (2, 4):
+    mesh = compat.make_mesh((ndev,), ("data",))
+    for dim_name, pk, fk_col in (("part", "partkey", "partkey"),
+                                 ("date", "datekey", "orderdate")):
+        idx = build_dim_index(tables[dim_name][pk])
+        # odd length exercises the EMPTY_KEY padding path
+        fk = tables["lineorder"][fk_col][:12_345]
+        ref = lookup(idx, fk)
+        got = sharded_lookup(idx, fk, mesh)
+        key = f"{{ndev}}dev_{{dim_name}}"
+        f = np.asarray(ref.found)
+        out[key] = bool(
+            np.array_equal(f, np.asarray(got.found))
+            and np.array_equal(np.asarray(ref.payload)[f],
+                               np.asarray(got.payload)[f])
+            and np.array_equal(np.asarray(ref.is_dup)[f],
+                               np.asarray(got.is_dup)[f]))
+
+# output really is sharded across devices (not gathered host-side)
+mesh = compat.make_mesh((4,), ("data",))
+idx = build_dim_index(tables["part"]["partkey"])
+pr = sharded_lookup(idx, tables["lineorder"]["partkey"], mesh)
+out["sharded_output"] = not pr.found.sharding.is_fully_replicated
+print("RESULT::" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def result():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = SCRIPT.format(src=os.path.abspath(src))
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env.pop("PYTHONWARNINGS", None)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT::")][-1]
+    return json.loads(line[len("RESULT::"):])
+
+
+@pytest.mark.parametrize("key", ["2dev_part", "2dev_date",
+                                 "4dev_part", "4dev_date"])
+def test_sharded_probe_matches_single_device(result, key):
+    assert result[key]
+
+
+def test_sharded_probe_output_stays_sharded(result):
+    assert result["sharded_output"]
