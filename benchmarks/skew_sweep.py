@@ -1,0 +1,235 @@
+"""Zipf skew sweep over probe schedules → ``BENCH_skew.json`` (§4.1).
+
+Measures warm/cold probe wall-time for every probe schedule (gathered /
+stream / deduped / hot_cold) across Zipf s ∈ {0, 0.5, 1.5, 2} — the paper's
+skew grid — on two dimension geometries:
+
+* a **small** dimension (fits the hot-table budget): the planner's
+  ``full_map`` degenerate case, where the whole dimension is replicated
+  into the direct map and every probe is one 8-byte gather;
+* a **large** dimension (code space ≫ budget): the genuinely
+  skew-adaptive case, where only the hottest keys are replicated and the
+  win appears at s ≥ 1.5.
+
+The ``adaptive`` row is the planner's pick for the measured stream stats;
+its wall time is the measured time of the schedule it dispatches to (they
+are the same compiled program).  Every schedule's packed result words are
+verified bit-identical against the ``kernels/ref.py`` oracle.  The
+``stream`` schedule runs interpret-mode on CPU (~46 µs/probe), so it is
+measured on a reduced stream and reported with its own ``m``.
+
+``--smoke`` shrinks everything for CI; perf expectations are recorded but
+only enforced in full runs (tiny smoke sizes are noise-dominated).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+if __package__ in (None, ""):  # `python benchmarks/skew_sweep.py` (CI)
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+from benchmarks.util import row
+from repro.core import (build_hot_table, build_table, hash_bucket,
+                        hot_hit_count, measure_skew, pack_words, plan_probe,
+                        probe, probe_deduped, probe_hot_cold, refine_plan,
+                        suggest_num_buckets, top_keys)
+from repro.core.skew import zipf_sample
+from repro.kernels import bucket_probe_ref, probe_table
+
+ZIPF_S = (0.0, 0.5, 1.5, 2.0)
+
+
+def _build_dim(n_dim: int, bucket_width: int):
+    codes = jnp.arange(n_dim, dtype=jnp.int32)
+    nb = suggest_num_buckets(n_dim, bucket_width, 0.5)
+    return build_table(codes, codes, num_buckets=nb,
+                       bucket_width=bucket_width)
+
+
+def _time(fn, keys, reps: int) -> tuple[float, float]:
+    """(cold_s, warm_s): first call (incl. compile) + median of ``reps``."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(keys))
+    cold = time.perf_counter() - t0
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(keys))
+        ts.append(time.perf_counter() - t0)
+    return cold, sorted(ts)[len(ts) // 2]
+
+
+def _hot_setup(table, n_dim: int, keys_np: np.ndarray):
+    """Planner decision (+forced hot_cold flavor) and its hot codes."""
+    stats = measure_skew(keys_np)
+    kw = dict(bucket_width=table.bucket_width,
+              backend=jax.default_backend(), code_space=n_dim,
+              hash_mode=table.hash_mode)
+    plan = plan_probe(stats, **kw)
+    hot_plan = (plan if plan.schedule == "hot_cold"
+                else plan_probe(stats, force="hot_cold", **kw))
+    if hot_plan.full_map:
+        hot = jnp.arange(hot_plan.hot_entries, dtype=jnp.int32)
+    else:
+        hot = jnp.asarray(top_keys(keys_np, hot_plan.hot_entries))
+        ht = build_hot_table(table, hot, hot_plan.hot_slots)
+        cold = int(keys_np.size
+                   - hot_hit_count(table, ht, jnp.asarray(keys_np)))
+        hot_plan = refine_plan(hot_plan, cold, int(keys_np.size))
+    return stats, plan, hot_plan, hot
+
+
+def _sweep_config(n_dim: int, m: int, stream_m: int, reps: int) -> dict:
+    bucket_width = 8 if jax.default_backend() != "tpu" else 128
+    table = _build_dim(n_dim, bucket_width)
+    out = {"n_dim": n_dim, "m": m, "stream_m": stream_m,
+           "bucket_width": bucket_width, "num_buckets": table.num_buckets,
+           "sweep": {}}
+    for s in ZIPF_S:
+        keys_np = zipf_sample(n_dim, m, s, seed=7)
+        keys = jnp.asarray(keys_np)
+        skeys = keys[:stream_m]
+        stats, plan, hot_plan, hot = _hot_setup(table, n_dim, keys_np)
+        # the oracle: comparator-array semantics over activated rows
+        ref = np.asarray(bucket_probe_ref(
+            table.keys, table.values, keys,
+            hash_bucket(keys, table.num_buckets, table.hash_mode)))
+
+        fns = {
+            "gathered": (jax.jit(lambda k: pack_words(probe(table, k))),
+                         keys, ref),
+            "stream": (jax.jit(lambda k: pack_words(
+                probe_table(table, k, schedule="stream"))),
+                skeys, ref[:stream_m]),
+            "deduped": (jax.jit(lambda k: pack_words(
+                probe_deduped(table, k))), keys, ref),
+            "hot_cold": (jax.jit(lambda k, p=hot_plan: pack_words(
+                probe_hot_cold(table, k,
+                               build_hot_table(table, hot, p.hot_slots),
+                               cold_capacity=p.cold_capacity,
+                               dedup_cold=p.dedup_cold))), keys, ref),
+        }
+        entry = {"stats": {"distinct": stats.distinct,
+                           "dup_factor": round(stats.dup_factor, 3),
+                           "max_share": round(stats.max_share, 5)},
+                 "schedules": {}}
+        for name, (fn, k, want) in fns.items():
+            # interpret-mode stream is ~ms/probe: one rep is plenty
+            cold_t, warm_t = _time(fn, k, 1 if name == "stream" else reps)
+            entry["schedules"][name] = {
+                "cold_s": round(cold_t, 6), "warm_s": round(warm_t, 6),
+                "m": int(k.shape[0]),
+                "oracle_identical": bool(
+                    np.array_equal(np.asarray(fn(k)), want)),
+            }
+        pick = plan.schedule
+        picked = entry["schedules"][pick]
+        gathered = entry["schedules"]["gathered"]
+        entry["adaptive"] = {
+            "schedule": pick,
+            "full_map": bool(hot_plan.full_map and pick == "hot_cold"),
+            "hot_entries": hot_plan.hot_entries if pick == "hot_cold" else 0,
+            "hot_slots": hot_plan.hot_slots if pick == "hot_cold" else 0,
+            "cold_capacity": (hot_plan.cold_capacity
+                              if pick == "hot_cold" else 0),
+            "warm_s": picked["warm_s"], "cold_s": picked["cold_s"],
+            "speedup_vs_gathered": round(
+                gathered["warm_s"] / picked["warm_s"], 3),
+        }
+        out["sweep"][f"s={s}"] = entry
+    return out
+
+
+def collect(smoke: bool = False) -> dict:
+    if smoke:
+        configs = {"dim_small": (2_000, 20_000, 1_024),
+                   "dim_large": (200_000, 20_000, 512)}
+        reps = 1
+    else:
+        # stream_m shrinks with the table: interpret-mode per-probe cost
+        # scales with table rows (the whole table is a kernel operand)
+        configs = {"dim_small": (30_000, 1_000_000, 4_096),
+                   "dim_large": (1_000_000, 1_000_000, 1_024)}
+        reps = 3
+    report: dict = {"benchmark": "skew_sweep", "smoke": smoke,
+                    "backend": jax.default_backend(),
+                    "zipf_s": list(ZIPF_S), "configs": {}}
+    for name, (n_dim, m, stream_m) in configs.items():
+        report["configs"][name] = _sweep_config(n_dim, m, stream_m, reps)
+
+    # headline checks across every config (the adaptive pick may legally be
+    # "gathered" — then its speedup is exactly 1.0, never a regression)
+    oracle_ok, never_slower = True, True
+    best15 = {"config": None, "speedup": 0.0}
+    for cname, cfg in report["configs"].items():
+        for sname, entry in cfg["sweep"].items():
+            oracle_ok &= all(r["oracle_identical"]
+                             for r in entry["schedules"].values())
+            never_slower &= entry["adaptive"]["speedup_vs_gathered"] >= 0.95
+            if sname == "s=1.5" and (entry["adaptive"]["speedup_vs_gathered"]
+                                     > best15["speedup"]):
+                best15 = {"config": cname,
+                          "speedup": entry["adaptive"][
+                              "speedup_vs_gathered"]}
+    report["checks"] = {
+        "all_oracle_identical": oracle_ok,
+        "adaptive_never_slower_than_gathered": never_slower,
+        "adaptive_best_speedup_at_s1.5": best15,
+    }
+    return report
+
+
+def write_json(path: str = "BENCH_skew.json", smoke: bool = False) -> dict:
+    report = collect(smoke=smoke)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return report
+
+
+def run():
+    """CSV rows for the run.py orchestrator (also writes BENCH_skew.json)."""
+    report = write_json()
+    rows = []
+    for cname, cfg in sorted(report["configs"].items()):
+        for sname, entry in sorted(cfg["sweep"].items()):
+            a = entry["adaptive"]
+            rows.append(row(
+                f"skew/{cname}_{sname}_adaptive", a["warm_s"] * 1e6,
+                f"pick={a['schedule']};"
+                f"vs_gathered={a['speedup_vs_gathered']}x"))
+    c = report["checks"]
+    rows.append(row("skew/adaptive_best_speedup_s1.5",
+                    c["adaptive_best_speedup_at_s1.5"]["speedup"],
+                    f"config={c['adaptive_best_speedup_at_s1.5']['config']};"
+                    f"oracle_ok={c['all_oracle_identical']}"))
+    return rows
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny sizes for CI (no perf assertions)")
+    p.add_argument("--out", default="BENCH_skew.json")
+    args = p.parse_args()
+    report = write_json(args.out, smoke=args.smoke)
+    checks = report["checks"]
+    print(json.dumps(checks, indent=2))
+    if not checks["all_oracle_identical"]:
+        raise SystemExit("schedule results diverge from the oracle")
+    if not args.smoke and not checks["adaptive_never_slower_than_gathered"]:
+        raise SystemExit("adaptive pick slower than the gathered default")
+    if not args.smoke and checks["adaptive_best_speedup_at_s1.5"][
+            "speedup"] < 1.2:
+        raise SystemExit("no adaptive win at Zipf 1.5")
+
+
+if __name__ == "__main__":
+    main()

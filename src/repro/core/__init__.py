@@ -14,9 +14,13 @@ from repro.core.hash_table import (EMPTY_KEY, HASH_FIBONACCI, HASH_IDENTITY,
                                    JSPIMTable, build_table, entry_update,
                                    hash_bucket, index_update,
                                    suggest_num_buckets, table_update)
-from repro.core.lookup import (JoinResult, ProbeResult, join, probe,
-                               probe_deduped, select_distinct,
-                               select_where_eq)
+from repro.core.lookup import (HotTable, JoinResult, ProbeResult,
+                               build_hot_table, hot_hit_count, join,
+                               pack_words, probe, probe_deduped,
+                               probe_hot_cold, select_distinct,
+                               select_where_eq, unpack_words)
+from repro.core.planner import SchedulePlan, plan_probe, refine_plan
+from repro.core.skew import SkewStats, measure_skew, top_keys
 
 __all__ = [
     "DICT_PAD", "NO_CODE", "Dictionary", "build_dictionary", "decode",
@@ -24,6 +28,8 @@ __all__ = [
     "windowed_coalesce_mask", "EMPTY_KEY", "HASH_FIBONACCI", "HASH_IDENTITY",
     "JSPIMTable", "build_table", "entry_update", "hash_bucket",
     "index_update", "suggest_num_buckets", "table_update", "JoinResult",
-    "ProbeResult", "join", "probe", "probe_deduped", "select_distinct",
-    "select_where_eq",
+    "ProbeResult", "HotTable", "build_hot_table", "hot_hit_count",
+    "pack_words", "probe_hot_cold", "unpack_words", "join", "probe",
+    "probe_deduped", "select_distinct", "select_where_eq", "SchedulePlan",
+    "plan_probe", "refine_plan", "SkewStats", "measure_skew", "top_keys",
 ]

@@ -252,6 +252,112 @@ def jspim_select_distinct_seconds(n_unique: int,
     return (n_unique * cfg.key_bits / 8) / (cfg.channels * cfg.channel_gbps * 1e9)
 
 
+# --------------------------------------------------------------------------
+# Host-side probe-schedule model (planner input, core/planner.py)
+# --------------------------------------------------------------------------
+#
+# The engine's probe schedules run on whatever backend XLA targets, so the
+# planner needs a cost model of the *host*, not of the DDR4 PIM above.  The
+# same building blocks recur in every schedule — random row gathers, full
+# elementwise passes, sorts — so the model is per-element costs of those
+# blocks, calibrated per backend (CPU constants measured on the dev
+# container: 2M-probe gathered probe ≈ 160-190 ms, 2M argsort ≈ 1.2 s,
+# 2M cumsum ≈ 15 ms, pallas interpret-mode stream ≈ 46 µs/probe).
+
+
+@dataclasses.dataclass(frozen=True)
+class HostProbeCost:
+    """Per-element costs (ns) of the probe building blocks on a backend."""
+
+    gather_ns_per_byte: float     # random gather, per byte moved (miss)
+    cached_gather_ns_per_byte: float  # …when the gathered set is resident
+    cache_bytes: int              # last-level-cache-class working-set bound
+    lane_ns: float                # comparator work per bucket lane compared
+    sort_ns_per_elem_log2: float  # argsort, per element per log2(n)
+    pass_ns: float                # one elementwise pass over the stream
+    interpret_probe_ns: float     # pallas interpret-mode per-probe overhead
+    op_ns: float                  # fixed dispatch/launch cost per fused op
+
+
+# rough fused-op counts per schedule: the fixed-overhead term that decides
+# small streams (where a richer schedule can only lose)
+_SCHEDULE_OPS = {"gathered": 3, "stream": 3, "deduped": 10, "hot_cold": 16}
+
+HOST_COSTS: dict[str, HostProbeCost] = {
+    "cpu": HostProbeCost(gather_ns_per_byte=1.0,
+                         cached_gather_ns_per_byte=0.25,
+                         cache_bytes=32 * 2**20, lane_ns=2.0,
+                         sort_ns_per_elem_log2=28.0, pass_ns=7.5,
+                         interpret_probe_ns=46_000.0, op_ns=50_000.0),
+    # HBM-class accelerator: gathers and passes are bandwidth-cheap, sorts
+    # comparatively dear, and the kernels compile (no interpret overhead).
+    "tpu": HostProbeCost(gather_ns_per_byte=0.02,
+                         cached_gather_ns_per_byte=0.01,
+                         cache_bytes=16 * 2**20, lane_ns=0.02,
+                         sort_ns_per_elem_log2=2.0, pass_ns=0.05,
+                         interpret_probe_ns=0.0, op_ns=5_000.0),
+}
+
+def _log2(n: int) -> float:
+    return math.log2(max(2, n))
+
+
+def probe_schedule_seconds(schedule: str, *, n_probes: int, distinct: int,
+                           bucket_width: int, cold_capacity: int = 0,
+                           hot_slots: int = 0,
+                           backend: str = "cpu") -> float:
+    """Modeled wall seconds of one probe schedule on ``backend``.
+
+    ``cold_capacity`` / ``hot_slots`` parameterize ``hot_cold`` only (the
+    planned hot coverage is already folded into ``cold_capacity``);
+    ``cold_capacity == 0`` is the full-map degenerate case (no cold path
+    at all).  Bucket-row gathers are cache-aware: a probe stream touching
+    few distinct rows (skew, or a small dimension) keeps them resident,
+    which speeds the *gathered* baseline too — the planner must model
+    that or it will switch on wins the cache already banked.
+    """
+    c = HOST_COSTS.get(backend, HOST_COSTS["cpu"])
+    m, w = n_probes, bucket_width
+    row_bytes = 2 * w * 4  # key row + value row per activation
+
+    def gather_rate(resident_bytes: float) -> float:
+        return (c.cached_gather_ns_per_byte
+                if resident_bytes <= c.cache_bytes else c.gather_ns_per_byte)
+
+    def activations(k: int, touched_rows: int) -> float:
+        """k bucket activations over ``touched_rows`` distinct rows."""
+        return k * (row_bytes * gather_rate(touched_rows * row_bytes)
+                    + w * c.lane_ns)
+
+    if schedule == "gathered":
+        ns = activations(m, distinct) + 2 * m * c.pass_ns
+    elif schedule == "stream":
+        if backend == "tpu":  # compiled: per-probe DMA ≈ gathered traffic
+            ns = activations(m, distinct) + 2 * m * c.pass_ns
+        else:                 # interpret-mode grid loop dominates
+            ns = m * c.interpret_probe_ns
+    elif schedule == "deduped":
+        uniq = min(m, distinct)
+        ns = (m * _log2(m) * c.sort_ns_per_elem_log2   # coalesce argsort
+              + 4 * m * c.pass_ns                      # scan/scatter/inverse
+              + activations(uniq, uniq)
+              + 2 * m * c.pass_ns)                     # scatter back
+    elif schedule == "hot_cold":
+        # hot table (8 B/slot·2) is resident by construction; the fused
+        # gather+compare+select is ~one pass
+        ns = (m * (8 * c.cached_gather_ns_per_byte + c.pass_ns)
+              + hot_slots * row_bytes * c.gather_ns_per_byte)  # table build
+        cold = min(m, int(cold_capacity))
+        if cold > 0:
+            uniq = min(cold, distinct)
+            ns += (m * 3 * c.pass_ns                   # mask/cumsum/merge
+                   + cold * _log2(cold) * c.sort_ns_per_elem_log2
+                   + activations(uniq, uniq))
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+    return (ns + _SCHEDULE_OPS[schedule] * c.op_ns) * 1e-9
+
+
 def data_overhead_bytes(n_fact: int, n_dim: int, dup_total: int,
                         cfg: PIMConfig = PIMConfig()) -> dict:
     """§4.2.1 accounting: dictionary + encoded fact copy + hash table + dup list."""

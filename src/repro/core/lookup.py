@@ -1,6 +1,6 @@
 """JSPIM search-engine semantics: probe, join, select (§3.1.1, §3.2).
 
-Two probe schedules:
+Three probe schedules:
 
 * ``probe``      — faithful *streaming* order: every probe key activates its
                    bucket (gather of one row) and all ``bucket_width`` slots
@@ -9,7 +9,16 @@ Two probe schedules:
                    probe — O(1) in bucket occupancy, the paper's core claim.
 * ``probe_deduped`` — the RLU coalescing window generalized: dedup the probe
                    block first, probe unique keys only, scatter results back.
-                   Duplicated fact keys cost one activation total.
+                   Duplicated fact keys cost one activation total.  Falls
+                   back to the plain probe when the unique capacity is
+                   exceeded (never probes a truncated unique set).
+* ``probe_hot_cold`` — the §3.3 rank-level hot-key path: the hottest codes
+                   are served from a tiny direct-mapped ``HotTable`` (one
+                   gather, no bucket search — the "replicated hot table"),
+                   the cold remainder is compacted (cumsum, no sort over the
+                   full stream) and probed deduped, then the two result
+                   streams are scatter-merged.  A skewed stream costs
+                   ~``distinct`` bucket activations instead of ~``n``.
 
 ``join`` expands matches through the duplication table (CSR) with a fixed
 output capacity; ``select_where_eq`` and ``select_distinct`` are the paper's
@@ -26,11 +35,27 @@ import jax.numpy as jnp
 from repro.core import dedup
 from repro.core.hash_table import EMPTY_KEY, JSPIMTable, hash_bucket
 
+# packed value word meaning "no match" (same convention as kernels/ref.py:
+# payload -1, is_dup 0 -> (-1 << 1) | 0 == -2)
+NULL_WORD = jnp.int32(-2)
+
 
 class ProbeResult(NamedTuple):
     found: jax.Array    # (m,) bool
     payload: jax.Array  # (m,) int32 — row index OR duplication-group id
     is_dup: jax.Array   # (m,) bool — tag bit from the value word
+
+
+def pack_words(pr: ProbeResult) -> jax.Array:
+    """ProbeResult -> packed value words (payload<<1 | dup; NULL_WORD miss)."""
+    word = (pr.payload.astype(jnp.int32) << 1) | pr.is_dup.astype(jnp.int32)
+    return jnp.where(pr.found, word, NULL_WORD)
+
+
+def unpack_words(words: jax.Array) -> ProbeResult:
+    """Packed value words -> ProbeResult."""
+    found = words != NULL_WORD
+    return ProbeResult(found, words >> 1, (words & 1).astype(bool))
 
 
 def probe(table: JSPIMTable, probe_keys: jax.Array) -> ProbeResult:
@@ -48,13 +73,124 @@ def probe(table: JSPIMTable, probe_keys: jax.Array) -> ProbeResult:
 
 def probe_deduped(table: JSPIMTable, probe_keys: jax.Array,
                   unique_capacity: int | None = None) -> ProbeResult:
-    """Coalescing-window schedule: dedup, probe uniques, scatter back."""
+    """Coalescing-window schedule: dedup, probe uniques, scatter back.
+
+    When ``unique_capacity`` is smaller than the stream's distinct count the
+    coalesce overflows; probing the truncated unique set would silently
+    return wrong results for the dropped keys, so the whole stream falls
+    back to the plain (non-deduped) probe instead.
+    """
     m = probe_keys.shape[0]
-    cap = unique_capacity or m
+    cap = int(unique_capacity or m)
     co = dedup.coalesce(probe_keys, cap, pad=int(EMPTY_KEY))
-    u = probe(table, co.unique)
-    return ProbeResult(u.found[co.inverse], u.payload[co.inverse],
-                       u.is_dup[co.inverse])
+
+    def deduped_path(_) -> ProbeResult:
+        u = probe(table, co.unique)
+        return ProbeResult(u.found[co.inverse], u.payload[co.inverse],
+                           u.is_dup[co.inverse])
+
+    if cap >= m:  # can never overflow: no fallback branch to compile
+        return deduped_path(None)
+    return jax.lax.cond(co.overflow,
+                        lambda _: probe(table, probe_keys),
+                        deduped_path, None)
+
+
+# ---------------------------------------------------------------------------
+# Hot/cold schedule: replicated hot table + compacted cold remainder (§3.3)
+# ---------------------------------------------------------------------------
+
+
+class HotTable(NamedTuple):
+    """Tiny direct-mapped replica of the hottest hash-table entries.
+
+    ``keys[s]`` is the hot code owning slot ``s`` (EMPTY_KEY if none) and
+    ``words[s]`` its packed value word, fetched from the live ``JSPIMTable``
+    — one gather serves a hot probe, no bucket search.  The TPU analogue of
+    the paper's rank-level replication of hot keys: small enough (K entries)
+    to live in every device's fastest memory.
+    """
+
+    keys: jax.Array   # (num_slots,) int32 codes, EMPTY_KEY padded
+    words: jax.Array  # (num_slots,) int32 packed value words
+
+
+def build_hot_table(table: JSPIMTable, hot_codes: jax.Array,
+                    num_slots: int) -> HotTable:
+    """Direct-map the hottest codes; on slot collision the hotter wins.
+
+    ``hot_codes`` must be ordered hottest-first (see ``skew.top_keys``).
+    Built *from the live table* inside the probe program, so §3.2.3 updates
+    can never leave a stale replica.  ``num_slots`` must be a power of two.
+    """
+    assert num_slots & (num_slots - 1) == 0, "num_slots must be pow2"
+    codes = hot_codes.astype(jnp.int32)
+    h = codes.shape[0]
+    slot = hash_bucket(codes, num_slots, table.hash_mode)
+    rank = jnp.arange(h, dtype=jnp.int32)
+    winner = jnp.full((num_slots,), h, jnp.int32).at[slot].min(rank)
+    keys = jnp.where(winner < h, codes[jnp.clip(winner, 0, h - 1)],
+                     EMPTY_KEY)
+    return HotTable(keys=keys, words=pack_words(probe(table, keys)))
+
+
+def hot_hit_count(table: JSPIMTable, hot: HotTable,
+                  probe_keys: jax.Array) -> jax.Array:
+    """() int32 — how many probes the hot table serves (planner refinement)."""
+    codes = probe_keys.astype(jnp.int32)
+    slot = hash_bucket(codes, hot.keys.shape[0], table.hash_mode)
+    hit = (hot.keys[slot] == codes) & (codes != EMPTY_KEY)
+    return hit.astype(jnp.int32).sum()
+
+
+def probe_hot_cold(table: JSPIMTable, probe_keys: jax.Array, hot: HotTable,
+                   *, cold_capacity: int,
+                   dedup_cold: bool = True) -> ProbeResult:
+    """Hot/cold split probe, bit-identical to ``probe``.
+
+    Hot probes (code present in the direct-mapped ``HotTable``) are served
+    by a single 8-byte gather.  Cold probes are compacted into a fixed
+    ``cold_capacity``-shaped stream via a cumsum (no sort over the full
+    stream), probed through the normal bucket path — deduped, so duplicated
+    cold keys cost one activation — and scatter-merged back.  If the cold
+    count exceeds ``cold_capacity`` the whole stream falls back to the
+    plain probe (correct for arbitrary streams, not just the planned one).
+    """
+    codes = probe_keys.astype(jnp.int32)
+    m = codes.shape[0]
+    cap = int(cold_capacity)
+    slot = hash_bucket(codes, hot.keys.shape[0], table.hash_mode)
+    hot_hit = (hot.keys[slot] == codes) & (codes != EMPTY_KEY)
+    hot_word = hot.words[slot]
+
+    if cap == 0:
+        # full replica (planner ``full_map``): every live table entry is in
+        # the hot table, so a hot miss IS a table miss — no cold path.
+        return unpack_words(jnp.where(hot_hit, hot_word, NULL_WORD))
+
+    csum = jnp.cumsum((~hot_hit).astype(jnp.int32))
+    n_cold = csum[-1]
+
+    def split_path(_) -> jax.Array:
+        # gather-based stream compaction: the j-th cold probe (1-indexed)
+        # sits at the first position where csum reaches j, found by binary
+        # search — an XLA scatter over the full stream would cost more than
+        # the gathered probe itself on CPU.
+        j = jnp.arange(1, cap + 1, dtype=jnp.int32)
+        src = jnp.searchsorted(csum, j).astype(jnp.int32)
+        cold_keys = jnp.where(j <= n_cold,
+                              codes[jnp.minimum(src, m - 1)], EMPTY_KEY)
+        cpr = (probe_deduped(table, cold_keys)
+               if dedup_cold else probe(table, cold_keys))
+        cold_word = pack_words(cpr)[jnp.clip(csum - 1, 0, cap - 1)]
+        return jnp.where(hot_hit, hot_word, cold_word)
+
+    if cap >= m:  # every probe fits the cold stream: no fallback branch
+        return unpack_words(split_path(None))
+    words = jax.lax.cond(n_cold > cap,
+                         lambda _: pack_words(probe(table, codes)),
+                         split_path, None)
+    return unpack_words(words)
 
 
 class JoinResult(NamedTuple):

@@ -1,9 +1,22 @@
-"""Skew generation and measurement (paper §4.1: Zipf 0 / 0.5 / 1.5 / 2)."""
+"""Skew generation and measurement (paper §4.1: Zipf 0 / 0.5 / 1.5 / 2).
+
+``measure_skew`` summarizes a probe stream into a hashable ``SkewStats``
+struct — the planner input (``core/planner.py``): duplication factor,
+hottest-key share, and the cumulative probe share captured by the top-h
+hottest keys for a fixed grid of h values (the "how much would a replicated
+hot table of size h cover" curve the §3.3 rank-level hot-key path needs).
+"""
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+# hot-table candidate sizes (entries) the planner may replicate; the
+# top-share curve is measured exactly at these points.
+TOP_SHARE_GRID = (64, 256, 1024, 4096, 16384, 32768)
 
 
 def zipf_weights(n: int, s: float) -> np.ndarray:
@@ -38,12 +51,57 @@ def zipf_sample_jax(key: jax.Array, n_keys: int, size: int,
     return jnp.searchsorted(cdf, u).astype(jnp.int32).clip(0, n_keys - 1)
 
 
-def skew_stats(keys: np.ndarray) -> dict:
-    """Duplication factor, hottest-key share, distinct count."""
+@dataclasses.dataclass(frozen=True)
+class SkewStats:
+    """Hashable fact-side skew summary (static metadata on ``BuildStats``).
+
+    ``top_share[i]`` is the fraction of the probe stream covered by the
+    ``TOP_SHARE_GRID[i]`` hottest keys (clipped to 1.0 once the grid point
+    exceeds ``distinct``).
+    """
+
+    n: int
+    distinct: int
+    dup_factor: float
+    max_share: float
+    top_share: tuple[float, ...] = ()
+
+    def coverage(self, h: int) -> float:
+        """Interpolated probe share covered by the top-``h`` keys."""
+        if h >= self.distinct:
+            return 1.0
+        share = 0.0
+        for k, s in zip(TOP_SHARE_GRID, self.top_share):
+            if k <= h:
+                share = s
+        return share
+
+
+def measure_skew(keys: np.ndarray) -> SkewStats:
+    """Exact skew summary of a concrete probe stream (host-side)."""
+    keys = np.asarray(keys)
+    _, counts = np.unique(keys, return_counts=True)
+    counts = np.sort(counts)[::-1]
+    cum = np.cumsum(counts, dtype=np.float64)
+    n = int(keys.size)
+    top = tuple(float(cum[min(h, counts.size) - 1] / n)
+                for h in TOP_SHARE_GRID)
+    return SkewStats(n=n, distinct=int(counts.size),
+                     dup_factor=float(n / counts.size),
+                     max_share=float(counts[0] / n), top_share=top)
+
+
+def top_keys(keys: np.ndarray, h: int) -> np.ndarray:
+    """The ``h`` hottest key values, hottest first (deterministic: frequency
+    descending, key value ascending as tiebreak).  Fewer than ``h`` distinct
+    keys returns them all."""
     vals, counts = np.unique(np.asarray(keys), return_counts=True)
-    return {
-        "n": int(keys.size),
-        "distinct": int(vals.size),
-        "dup_factor": float(keys.size / vals.size),
-        "max_share": float(counts.max() / keys.size),
-    }
+    order = np.lexsort((vals, -counts))
+    return vals[order[:h]].astype(np.int32)
+
+
+def skew_stats(keys: np.ndarray) -> dict:
+    """Duplication factor, hottest-key share, distinct count (dict form)."""
+    s = measure_skew(keys)
+    return {"n": s.n, "distinct": s.distinct, "dup_factor": s.dup_factor,
+            "max_share": s.max_share}

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -23,7 +24,10 @@ from repro.core import (Dictionary, JSPIMTable, build_dictionary, build_table,
                         encode, join as core_join, probe, probe_deduped,
                         suggest_num_buckets)
 from repro.core.hash_table import EMPTY_KEY
-from repro.core.lookup import JoinResult, ProbeResult
+from repro.core.lookup import (JoinResult, ProbeResult, build_hot_table,
+                               probe_hot_cold)
+from repro.core.planner import SchedulePlan
+from repro.core.skew import SkewStats, measure_skew
 from repro.kernels import probe_table, probe_table_filtered, slot_predicate
 
 
@@ -38,6 +42,9 @@ class BuildStats:
     overflow: int        # residual dropped entries (0 unless growth capped)
     grow_retries: int    # times num_buckets was doubled to absorb overflow
     load: float          # requested target load factor
+    # fact-side skew of the FK column this index will be probed with
+    # (planner input, §3.3 / §4.1 Zipf sensitivity); None if unknown
+    fact_skew: SkewStats | None = None
 
     @property
     def achieved_load(self) -> float:
@@ -62,16 +69,25 @@ def _default_bucket_width() -> int:
 
 
 def build_dim_index(dim_keys: jax.Array, *, bucket_width: int | None = None,
-                    load: float = 0.5, max_grow_retries: int = 8) -> DimIndex:
+                    load: float = 0.5, max_grow_retries: int = 8,
+                    fact_keys: jax.Array | np.ndarray | None = None
+                    ) -> DimIndex:
     """Encode the build column, then build the unique-key hash table whose
     values are dimension-row indices.
 
     The build is lossless: on bucket overflow the bucket count is doubled
     and the build retried (up to ``max_grow_retries`` times), so skewed or
     adversarial key distributions can never silently drop index entries.
+
+    ``fact_keys`` (optional) is the fact-side FK column this index will be
+    probed with; its skew summary (``measure_skew``: dup_factor, max_share,
+    top-share curve) is recorded on ``BuildStats.fact_skew`` so the probe
+    planner can pick a skew-adaptive schedule at query time.
     """
     bucket_width = bucket_width or _default_bucket_width()
     n = int(dim_keys.shape[0])
+    fact_skew = (measure_skew(np.asarray(fact_keys))
+                 if fact_keys is not None else None)
     d = build_dictionary(dim_keys, capacity=n)
     codes = encode(d, dim_keys)
     nb = suggest_num_buckets(n, bucket_width, load)
@@ -90,20 +106,48 @@ def build_dim_index(dim_keys: jax.Array, *, bucket_width: int | None = None,
     stats = BuildStats(num_buckets=nb, bucket_width=bucket_width,
                        n_unique=int(tbl.n_unique), n_build=n,
                        overflow=int(tbl.overflow), grow_retries=retries,
-                       load=load)
+                       load=load, fact_skew=fact_skew)
     return DimIndex(dictionary=d, table=tbl, stats=stats)
 
 
 def lookup(index: DimIndex, fact_keys: jax.Array, *, impl: str = "xla",
-           deduped: bool = False) -> ProbeResult:
-    """Probe fact keys; for PK dimensions payload is the dim-row index."""
+           deduped: bool = False, schedule: str | None = None,
+           plan: SchedulePlan | None = None,
+           hot_codes: jax.Array | None = None) -> ProbeResult:
+    """Probe fact keys; for PK dimensions payload is the dim-row index.
+
+    ``schedule`` overrides the probe schedule explicitly ("gathered" |
+    "stream" | "deduped" | "hot_cold"); ``plan`` (a planner decision)
+    supplies both the schedule and the hot/cold geometry.  With neither,
+    the legacy ``impl``/``deduped`` flags select the path.  ``hot_cold``
+    requires ``hot_codes`` (hottest-first dictionary codes, or the full
+    code range for a ``full_map`` plan) and a ``plan`` for geometry.
+    """
     codes = encode(index.dictionary, fact_keys)
+    if schedule is None:
+        if plan is not None:
+            schedule = plan.schedule
+        elif impl == "pallas":
+            schedule = "gathered"
+        elif impl == "pallas_stream":
+            schedule = "stream"
+        else:
+            schedule = "deduped" if deduped else "gathered"
+    if schedule == "hot_cold":
+        if plan is None or hot_codes is None:
+            raise ValueError("hot_cold needs a plan and hot_codes")
+        hot = build_hot_table(index.table, hot_codes, plan.hot_slots)
+        return probe_hot_cold(index.table, codes, hot,
+                              cold_capacity=plan.cold_capacity,
+                              dedup_cold=plan.dedup_cold)
+    if schedule == "stream":
+        return probe_table(index.table, codes, schedule="stream")
+    if schedule == "deduped":
+        return probe_deduped(index.table, codes)
+    if schedule != "gathered":
+        raise ValueError(f"unknown schedule {schedule!r}")
     if impl == "pallas":
         return probe_table(index.table, codes)
-    if impl == "pallas_stream":
-        return probe_table(index.table, codes, schedule="stream")
-    if deduped:
-        return probe_deduped(index.table, codes)
     return probe(index.table, codes)
 
 
@@ -136,8 +180,9 @@ def lookup_filtered(index: DimIndex, fact_keys: jax.Array,
 
 
 def sharded_lookup(index: DimIndex, fact_keys: jax.Array,
-                   mesh: jax.sharding.Mesh, *, axis: str = "data"
-                   ) -> ProbeResult:
+                   mesh: jax.sharding.Mesh, *, axis: str = "data",
+                   plan: SchedulePlan | None = None,
+                   hot_codes: jax.Array | None = None) -> ProbeResult:
     """Rank-parallel probe: replicate the (small) index, shard fact rows.
 
     The TPU analogue of §3.3's rank-level parallelism: every device holds
@@ -145,6 +190,13 @@ def sharded_lookup(index: DimIndex, fact_keys: jax.Array,
     table) and probes its shard of the fact FK column, so the probe scales
     linearly in device count with zero cross-device traffic.  Fact rows are
     padded to a multiple of the axis size with EMPTY_KEY (never matches).
+
+    With a ``hot_cold`` plan, ``hot_codes`` travels replicated (``P()``) —
+    every device builds the same tiny hot table from its index replica,
+    exactly the paper's replication of hot keys across ranks — while the
+    cold remainder of each shard stays shard-local.  The cold capacity is
+    per-shard (a shard's cold count is at most the stream's), and the
+    per-shard overflow fallback keeps any split correct.
     """
     from repro.launch import compat
 
@@ -153,14 +205,23 @@ def sharded_lookup(index: DimIndex, fact_keys: jax.Array,
     pad = (-m) % ndev
     fk = jnp.pad(fact_keys.astype(jnp.int32), (0, pad),
                  constant_values=int(EMPTY_KEY))
+    hot_cold = plan is not None and plan.schedule == "hot_cold"
+    shard_m = (m + pad) // ndev
+    cold_cap = min(shard_m, plan.cold_capacity) if hot_cold else 0
 
-    def probe_shard(idx: DimIndex, keys: jax.Array) -> ProbeResult:
+    def probe_shard(idx: DimIndex, hot: jax.Array | None,
+                    keys: jax.Array) -> ProbeResult:
         codes = encode(idx.dictionary, keys)
+        if hot_cold:
+            ht = build_hot_table(idx.table, hot, plan.hot_slots)
+            return probe_hot_cold(idx.table, codes, ht,
+                                  cold_capacity=cold_cap,
+                                  dedup_cold=plan.dedup_cold)
         return probe(idx.table, codes)
 
     fn = compat.shard_map(probe_shard, mesh=mesh,
-                          in_specs=(P(), P(axis)), out_specs=P(axis))
-    pr = fn(index, fk)
+                          in_specs=(P(), P(), P(axis)), out_specs=P(axis))
+    pr = fn(index, hot_codes if hot_cold else None, fk)
     return ProbeResult(pr.found[:m], pr.payload[:m], pr.is_dup[:m])
 
 

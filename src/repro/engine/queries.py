@@ -23,6 +23,12 @@ Execution pipeline (DESIGN.md §4):
     cached probes, so a warm query is one XLA dispatch.  A second "full"
     flavor folds the probe itself (and, on the Pallas path, the fused
     probe+predicate kernel) into the same program for cache-cold runs.
+  * **Skew-adaptive probe scheduling** (DESIGN.md §6) — at engine build,
+    ``build_dim_index`` records the fact FK column's skew on
+    ``BuildStats.fact_skew`` and ``core.planner.plan_probe`` picks a probe
+    schedule per dimension (gathered / stream / deduped / hot_cold) from
+    the cost model; both ``probe_dim`` and the cache-cold fused programs
+    execute the planned schedule.  ``schedule=`` forces one everywhere.
   * **run_all** — the batched entry point: probes each dimension at most
     once and executes all 13 compiled programs against the shared cache.
 """
@@ -32,11 +38,15 @@ import dataclasses
 from functools import partial
 from typing import Callable
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import hash_table as _ht
 from repro.core.dictionary import encode
+from repro.core.lookup import build_hot_table, hot_hit_count
+from repro.core.planner import SchedulePlan, plan_probe, refine_plan
+from repro.core.skew import top_keys
 from repro.engine import baselines
 from repro.engine.join import (DimIndex, build_dim_index, lookup,
                                lookup_filtered)
@@ -153,9 +163,11 @@ _q("Q4.3", {"customer": _eq("region", 1), "supplier": _eq("nation", 6),
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("impl",))
-def _jspim_probe(index: DimIndex, fk: jax.Array, impl: str = "xla"):
-    pr = lookup(index, fk, impl=impl)
+@partial(jax.jit, static_argnames=("impl", "plan"))
+def _jspim_probe(index: DimIndex, fk: jax.Array,
+                 hot_codes: jax.Array | None = None, *,
+                 impl: str = "xla", plan: SchedulePlan | None = None):
+    pr = lookup(index, fk, impl=impl, plan=plan, hot_codes=hot_codes)
     return pr.found, jnp.where(pr.found, pr.payload, -1)
 
 
@@ -208,18 +220,28 @@ class SSBEngine:
     """Executes SSB queries with joins delegated to the selected engine.
 
     ``probe_impl``: "xla" | "pallas" | "pallas_stream" (jspim mode only).
+    ``schedule``: "auto" lets the planner pick a probe schedule per
+    dimension from the fact-side skew stats recorded at index build;
+    "gathered" | "stream" | "deduped" | "hot_cold" force one everywhere
+    (benchmark override).
     """
 
     def __init__(self, tables: dict[str, Table], mode: str = "jspim",
-                 probe_impl: str = "xla"):
+                 probe_impl: str = "xla", schedule: str = "auto"):
         self.tables = tables
         self.mode = mode
         self.probe_impl = probe_impl
+        self.schedule = schedule
         self.indexes: dict[str, DimIndex] = {}
+        self.plans: dict[str, SchedulePlan] = {}
+        self._hot_codes: dict[str, jax.Array] = {}
         if mode == "jspim":
-            # built once, reused across queries (§3.2.3 persistence)
+            # built once, reused across queries (§3.2.3 persistence); the
+            # fact FK column rides along so BuildStats records its skew
             for dim, pk in DIM_PK.items():
-                self.indexes[dim] = build_dim_index(tables[dim][pk])
+                self.indexes[dim] = build_dim_index(
+                    tables[dim][pk], fact_keys=tables["lineorder"][FACT_FK[dim]])
+                self._plan_dim(dim)
         # cross-query probe cache: dim -> (found, dim_row) over fact rows
         self._probe_cache: dict[str, tuple[jax.Array, jax.Array]] = {}
         self._hits = 0
@@ -228,6 +250,36 @@ class SSBEngine:
         # compiled per-query programs, keyed by query name
         self._cached_programs: dict[str, Callable] = {}
         self._full_programs: dict[str, Callable] = {}
+
+    # -- skew-adaptive probe planning (§3.3) -------------------------------
+    def _plan_dim(self, dim: str) -> None:
+        """Plan the probe schedule for one dimension and stage its hot
+        codes (hottest-first, or the full code range for a full map)."""
+        idx = self.indexes[dim]
+        st = idx.stats
+        force = None if self.schedule == "auto" else self.schedule
+        if st is None or st.fact_skew is None:
+            self.plans[dim] = SchedulePlan(schedule=force or "gathered")
+            return
+        plan = plan_probe(st.fact_skew, bucket_width=st.bucket_width,
+                          backend=jax.default_backend(),
+                          impl=self.probe_impl, code_space=st.n_unique,
+                          hash_mode=idx.table.hash_mode, force=force)
+        if plan.schedule == "hot_cold":
+            fk = self.tables["lineorder"][FACT_FK[dim]]
+            if plan.full_map:
+                hot = jnp.arange(plan.hot_entries, dtype=jnp.int32)
+            else:
+                hot = encode(idx.dictionary, jnp.asarray(
+                    top_keys(np.asarray(fk), plan.hot_entries)))
+                # tighten the cold capacity to the exact measured count
+                ht = build_hot_table(idx.table, hot, plan.hot_slots)
+                codes = encode(idx.dictionary, fk)
+                cold = int(fk.shape[0]
+                           - hot_hit_count(idx.table, ht, codes))
+                plan = refine_plan(plan, cold, int(fk.shape[0]))
+            self._hot_codes[dim] = hot
+        self.plans[dim] = plan
 
     @property
     def build_stats(self):
@@ -239,7 +291,10 @@ class SSBEngine:
         fact = self.tables["lineorder"]
         fk = fact[FACT_FK[dim]]
         if self.mode == "jspim":
-            return _jspim_probe(self.indexes[dim], fk, impl=self.probe_impl)
+            return _jspim_probe(self.indexes[dim], fk,
+                                self._hot_codes.get(dim),
+                                impl=self.probe_impl,
+                                plan=self.plans.get(dim))
         dk = self.tables[dim][DIM_PK[dim]]
         if self.mode == "baseline":
             return _sort_merge_probe(fk, dk)
@@ -332,9 +387,10 @@ class SSBEngine:
             return prog
         spec = SSB_QUERIES[name]
         mode, impl = self.mode, self.probe_impl
+        plans = dict(self.plans)  # fixed per engine: safe static closure
         fuse_filter = mode == "jspim" and impl.startswith("pallas")
 
-        def program(fact_cols, dim_cols, indexes):
+        def program(fact_cols, dim_cols, indexes, hots):
             probes: dict[str, tuple[jax.Array, jax.Array]] = {}
             for dim in spec.joined_dims():
                 fk = fact_cols[FACT_FK[dim]]
@@ -344,7 +400,9 @@ class SSBEngine:
                         pr = lookup_filtered(indexes[dim], fk, dmask,
                                              impl=impl)
                     else:
-                        pr = lookup(indexes[dim], fk, impl=impl)
+                        pr = lookup(indexes[dim], fk, impl=impl,
+                                    plan=plans.get(dim),
+                                    hot_codes=hots.get(dim))
                     probes[dim] = (pr.found,
                                    jnp.where(pr.found, pr.payload, -1))
                 elif mode == "baseline":
@@ -379,15 +437,19 @@ class SSBEngine:
             return self._cached_program(name)(fact_cols, dim_cols, probes)
         if self.mode == "jspim":
             idx = {d: self.indexes[d] for d in spec.joined_dims()}
+            hots = {d: self._hot_codes[d] for d in spec.joined_dims()
+                    if d in self._hot_codes}
         else:
-            idx = {}
-        return self._full_program(name)(fact_cols, dim_cols, idx)
+            idx, hots = {}, {}
+        return self._full_program(name)(fact_cols, dim_cols, idx, hots)
 
     def _join_eager(self, dim: str) -> tuple[jax.Array, jax.Array]:
         """Un-jitted flavor of ``_join`` (op-by-op dispatch, no caching)."""
         fact = self.tables["lineorder"]
         fk = fact[FACT_FK[dim]]
         if self.mode == "jspim":
+            # deliberately schedule-oblivious: this is the seed reference
+            # the planned/fused paths are measured and tested against
             pr = lookup(self.indexes[dim], fk, impl=self.probe_impl)
             return pr.found, jnp.where(pr.found, pr.payload, -1)
         dk = self.tables[dim][DIM_PK[dim]]

@@ -3,8 +3,10 @@ import numpy as np
 import jax.numpy as jnp
 from hypothesis import given, strategies as st
 
-from repro.core import coalesce, duplication_factor, scatter_back
+from repro.core import (build_table, coalesce, duplication_factor, probe,
+                        probe_deduped, scatter_back, suggest_num_buckets)
 from repro.core.dedup import windowed_coalesce_mask
+from repro.core.skew import zipf_sample
 
 
 @given(st.lists(st.integers(-50, 50), min_size=1, max_size=300))
@@ -39,3 +41,41 @@ def test_windowed_mask_matches_paper_window():
 def test_duplication_factor():
     assert float(duplication_factor(jnp.asarray([1, 1, 1, 1]))) == 4.0
     assert float(duplication_factor(jnp.asarray([1, 2, 3, 4]))) == 1.0
+
+
+# -- probe_deduped capacity handling ------------------------------------------
+
+def _small_table(n=500):
+    keys = jnp.arange(n, dtype=jnp.int32)
+    return build_table(keys, keys, num_buckets=suggest_num_buckets(n, 8),
+                       bucket_width=8)
+
+
+def test_probe_deduped_overflow_falls_back_to_plain_probe():
+    """capacity < distinct: the truncated unique set must NOT be probed —
+    the whole stream falls back to the non-deduped probe (regression:
+    silently wrong results for keys beyond the capacity)."""
+    t = _small_table()
+    keys = jnp.asarray(zipf_sample(500, 2_000, 0.0, seed=9))  # ~490 distinct
+    want = probe(t, keys)
+    got = probe_deduped(t, keys, unique_capacity=32)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_probe_deduped_at_exact_capacity_still_dedups():
+    t = _small_table()
+    keys = jnp.asarray([7, 7, 3, 3, 3, 9], jnp.int32)
+    got = probe_deduped(t, keys, unique_capacity=3)  # 3 distinct: no overflow
+    want = probe(t, keys)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_probe_deduped_skewed_stream_matches():
+    t = _small_table()
+    keys = jnp.asarray(zipf_sample(500, 4_000, 1.5, seed=4))
+    got = probe_deduped(t, keys, unique_capacity=512)
+    want = probe(t, keys)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))

@@ -96,3 +96,32 @@ def test_coalesce_window_kernel_matches_oracle(window, m, block):
                                interpret=True)
     want = windowed_coalesce_mask(keys, window=window)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("s", [0.5, 1.5, 2.0])
+@pytest.mark.parametrize("m,block", [(300, 64), (1000, 256)])
+def test_coalesce_window_kernel_zipf_streams(s, m, block):
+    """window=8 on skewed probe streams (the paper's operating point),
+    including runs that cross block boundaries where the kernel must carry
+    the previous block's tail."""
+    from repro.core.dedup import windowed_coalesce_mask
+    from repro.core.skew import zipf_sample
+    from repro.kernels.coalesce_window import coalesce_window_mask
+    keys = jnp.asarray(zipf_sample(200, m, s, seed=int(s * 10) + m))
+    got = coalesce_window_mask(keys, window=8, block=block, interpret=True)
+    want = windowed_coalesce_mask(keys, window=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if s >= 1.5:  # the window must actually be filtering on skewed input
+        assert int(np.asarray(want).sum()) > 0
+
+
+def test_coalesce_window_kernel_repeat_run_across_blocks():
+    """A run of one hot key spanning a block boundary: every repeat after
+    the first must be filtered, including the first keys of block 2."""
+    from repro.core.dedup import windowed_coalesce_mask
+    from repro.kernels.coalesce_window import coalesce_window_mask
+    keys = jnp.asarray([5] * 40, jnp.int32)
+    got = coalesce_window_mask(keys, window=8, block=16, interpret=True)
+    want = windowed_coalesce_mask(keys, window=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(got)[1:].all() and not bool(np.asarray(got)[0])

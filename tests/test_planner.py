@@ -1,0 +1,198 @@
+"""Skew-adaptive scheduler: planner decisions, hot/cold probe correctness."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (build_hot_table, build_table, hot_hit_count,
+                        measure_skew, pack_words, plan_probe, probe,
+                        probe_hot_cold, refine_plan, suggest_num_buckets,
+                        top_keys)
+from repro.core.costmodel import probe_schedule_seconds
+from repro.core.hash_table import EMPTY_KEY
+from repro.core.planner import (GATHERED_MARGIN, MIN_ADAPTIVE_PROBES,
+                                SchedulePlan, cold_capacity_for)
+from repro.core.skew import SkewStats, zipf_sample
+
+
+def _table(n_keys, bucket_width=8, hash_mode="identity"):
+    keys = jnp.arange(n_keys, dtype=jnp.int32)
+    nb = suggest_num_buckets(n_keys, bucket_width)
+    return build_table(keys, keys, num_buckets=nb,
+                       bucket_width=bucket_width, hash_mode=hash_mode)
+
+
+def _skewed_stats(m=4_000_000, distinct=1_500_000, hot=0.99):
+    """Synthetic stats: top-64 keys carry ``hot`` of the stream, and the
+    distinct working set is too big for the cache (so gathered pays full
+    DRAM gathers — the regime where hot/cold splitting wins)."""
+    ts = tuple(min(1.0, hot + i * 0.001) for i in range(6))
+    return SkewStats(n=m, distinct=distinct, dup_factor=m / distinct,
+                     max_share=hot / 4, top_share=ts)
+
+
+# -- planner decisions --------------------------------------------------------
+
+def test_plan_is_deterministic_and_hashable():
+    s = _skewed_stats()
+    a = plan_probe(s, bucket_width=8, backend="cpu", code_space=2_000_000)
+    b = plan_probe(s, bucket_width=8, backend="cpu", code_space=2_000_000)
+    assert a == b
+    assert hash(a) == hash(b)
+    assert {a: 1}[b] == 1  # usable as a jit static argument
+
+
+def test_planner_picks_gathered_for_uniform_large_dim():
+    s = SkewStats(n=1_000_000, distinct=900_000, dup_factor=1.1,
+                  max_share=1e-5, top_share=(0.0001, 0.0004, 0.001,
+                                             0.004, 0.016, 0.033))
+    p = plan_probe(s, bucket_width=8, backend="cpu", code_space=2_000_000)
+    assert p.schedule == "gathered"
+    assert p.hot_entries == 0 and p.cold_capacity == 0
+
+
+def test_planner_picks_hot_cold_for_heavy_skew_large_dim():
+    p = plan_probe(_skewed_stats(), bucket_width=8, backend="cpu",
+                   code_space=2_000_000)
+    assert p.schedule == "hot_cold"
+    assert not p.full_map
+    assert p.hot_entries > 0 and p.hot_slots >= p.hot_entries
+    assert p.cold_capacity >= 256
+
+
+def test_planner_full_map_for_small_code_space():
+    p = plan_probe(_skewed_stats(distinct=30_000), bucket_width=8,
+                   backend="cpu", code_space=30_000)
+    assert p.schedule == "hot_cold" and p.full_map
+    assert p.hot_entries == 30_000
+    assert p.cold_capacity == 0  # no cold path at all
+    assert p.hot_slots >= 30_000
+
+
+def test_planner_small_streams_stay_gathered():
+    s = _skewed_stats(m=MIN_ADAPTIVE_PROBES - 1)
+    p = plan_probe(s, bucket_width=8, backend="cpu", code_space=30_000)
+    assert p.schedule == "gathered"
+
+
+def test_planner_respects_impl_and_force():
+    s = _skewed_stats(distinct=30_000)
+    assert plan_probe(s, bucket_width=8, impl="pallas",
+                      code_space=30_000).schedule == "gathered"
+    assert plan_probe(s, bucket_width=8, impl="pallas_stream",
+                      code_space=30_000).schedule == "stream"
+    forced = plan_probe(s, bucket_width=8, code_space=2_000_000,
+                        force="deduped")
+    assert forced.schedule == "deduped"
+    assert len(forced.est_seconds) == 4  # estimates kept for reporting
+
+
+def test_planner_margin_guards_the_default():
+    """The winning candidate must beat gathered by the full margin."""
+    p = plan_probe(_skewed_stats(), bucket_width=8, backend="cpu",
+                   code_space=2_000_000)
+    ests = dict(p.est_seconds)
+    assert ests["hot_cold"] * GATHERED_MARGIN < ests["gathered"]
+
+
+def test_refine_plan_tightens_cold_capacity():
+    p = plan_probe(_skewed_stats(), bucket_width=8, backend="cpu",
+                   code_space=2_000_000)
+    tight = refine_plan(p, exact_cold=1000, n_probes=4_000_000)
+    assert tight.cold_capacity >= 1000
+    assert tight.cold_capacity <= p.cold_capacity
+    # full-map plans have no cold path to tighten
+    fm = plan_probe(_skewed_stats(distinct=30_000), bucket_width=8,
+                    backend="cpu", code_space=30_000)
+    assert refine_plan(fm, exact_cold=0, n_probes=1_000_000) == fm
+
+
+def test_cold_capacity_covers_expected_cold():
+    for cov in (0.0, 0.5, 0.9, 0.999, 1.0):
+        cap = cold_capacity_for(1_000_000, cov)
+        assert cap >= min(1_000_000, int(1_000_000 * (1 - cov)))
+
+
+def test_cost_model_orders_schedules_sanely():
+    kw = dict(n_probes=1_000_000, distinct=500_000, bucket_width=8,
+              backend="cpu")
+    gathered = probe_schedule_seconds("gathered", **kw)
+    stream = probe_schedule_seconds("stream", **kw)
+    deduped = probe_schedule_seconds("deduped", **kw)
+    assert stream > deduped > gathered  # interpret-mode stream is dire
+    hot = probe_schedule_seconds("hot_cold", cold_capacity=0,
+                                 hot_slots=32768, **kw)
+    assert hot < gathered  # a resident full map beats bucket gathers
+
+
+# -- hot table / hot_cold probe correctness -----------------------------------
+
+@pytest.mark.parametrize("hash_mode", ["identity", "fibonacci"])
+@pytest.mark.parametrize("s", [0.0, 1.5])
+def test_probe_hot_cold_matches_probe(hash_mode, s):
+    t = _table(5_000, hash_mode=hash_mode)
+    keys_np = zipf_sample(8_000, 40_000, s, seed=11)  # 3000 keys miss
+    keys = jnp.asarray(keys_np)
+    hot = jnp.asarray(top_keys(keys_np, 512))
+    ht = build_hot_table(t, hot, 1024)
+    cold = int(keys.shape[0] - hot_hit_count(t, ht, keys))
+    got = probe_hot_cold(t, keys, ht, cold_capacity=max(256, cold + 7))
+    want = probe(t, keys)
+    np.testing.assert_array_equal(np.asarray(pack_words(got)),
+                                  np.asarray(pack_words(want)))
+
+
+def test_probe_hot_cold_full_map_matches_probe():
+    n = 3_000
+    t = _table(n)
+    ht = build_hot_table(t, jnp.arange(n, dtype=jnp.int32), 4096)
+    keys = jnp.asarray(zipf_sample(5_000, 20_000, 1.5, seed=5))
+    got = probe_hot_cold(t, keys, ht, cold_capacity=0)
+    want = probe(t, keys)
+    np.testing.assert_array_equal(np.asarray(pack_words(got)),
+                                  np.asarray(pack_words(want)))
+
+
+def test_probe_hot_cold_overflow_falls_back():
+    """Cold count above capacity: results must still equal the plain probe."""
+    t = _table(2_000)
+    keys = jnp.asarray(zipf_sample(2_000, 10_000, 0.0, seed=2))
+    ht = build_hot_table(t, jnp.asarray(top_keys(np.asarray(keys), 16)), 32)
+    got = probe_hot_cold(t, keys, ht, cold_capacity=64)  # cold ≫ 64
+    want = probe(t, keys)
+    np.testing.assert_array_equal(np.asarray(pack_words(got)),
+                                  np.asarray(pack_words(want)))
+
+
+def test_probe_hot_cold_handles_sentinels():
+    t = _table(100)
+    ht = build_hot_table(t, jnp.arange(100, dtype=jnp.int32), 128)
+    keys = jnp.asarray([0, 99, int(EMPTY_KEY), -1, 100, 5], jnp.int32)
+    got = probe_hot_cold(t, keys, ht, cold_capacity=0)
+    assert np.asarray(got.found).tolist() == [True, True, False, False,
+                                              False, True]
+
+
+def test_build_hot_table_collision_priority():
+    """Two hot codes sharing a direct-map slot: the hotter (earlier) wins."""
+    t = _table(64)
+    hot = jnp.asarray([3, 3 + 16, 5], jnp.int32)  # 3 and 19 collide mod 16
+    ht = build_hot_table(t, hot, 16)
+    assert int(ht.keys[3]) == 3       # rank 0 beat rank 1
+    assert int(ht.keys[5]) == 5
+    # the loser stays cold but the probe is still correct via the cold path
+    keys = jnp.asarray([3, 19, 5], jnp.int32)
+    got = probe_hot_cold(t, keys, ht, cold_capacity=4)
+    np.testing.assert_array_equal(np.asarray(pack_words(got)),
+                                  np.asarray(pack_words(probe(t, keys))))
+
+
+def test_hot_hit_count_exact():
+    t = _table(1_000)
+    ht = build_hot_table(t, jnp.arange(1_000, dtype=jnp.int32), 1024)
+    keys = jnp.asarray([0, 1, 2, 5_000, int(EMPTY_KEY)], jnp.int32)
+    assert int(hot_hit_count(t, ht, keys)) == 3
+
+
+def test_schedule_plan_defaults():
+    p = SchedulePlan(schedule="gathered")
+    assert p.hot_entries == 0 and not p.full_map

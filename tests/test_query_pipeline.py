@@ -142,6 +142,89 @@ def test_fused_pallas_program_matches(tables):
         assert np.array_equal(np.asarray(gp), np.asarray(gb))
 
 
+# -- skew-adaptive scheduler (DESIGN.md §6) ----------------------------------
+
+def test_engine_plans_are_deterministic(tables):
+    a = SSBEngine(tables, mode="jspim").plans
+    b = SSBEngine(tables, mode="jspim").plans
+    assert set(a) == {"customer", "supplier", "part", "date"}
+    assert a == b
+
+
+def test_hot_cold_engine_bit_identical_on_all_queries(tables):
+    rh = SSBEngine(tables, mode="jspim", schedule="hot_cold").run_all()
+    rg = SSBEngine(tables, mode="jspim", schedule="gathered").run_all()
+    for q in sorted(SSB_QUERIES):
+        assert int(rh[q][0]) == int(rg[q][0])
+        assert np.array_equal(np.asarray(rh[q][1]), np.asarray(rg[q][1]))
+
+
+def test_hot_cold_engine_full_programs_match(tables):
+    e = SSBEngine(tables, mode="jspim", schedule="hot_cold")
+    for q in ("Q1.1", "Q3.2", "Q4.3"):
+        tc, gc = e.run(q, use_cache=True)
+        tf, gf = e.run(q, use_cache=False)  # fused probe→…→aggregate
+        assert int(tc) == int(tf)
+        assert np.array_equal(np.asarray(gc), np.asarray(gf))
+
+
+def test_forced_schedules_share_results(tables):
+    want = SSBEngine(tables, mode="baseline").run_all(["Q2.1"])["Q2.1"]
+    for schedule in ("gathered", "deduped", "hot_cold"):
+        got = SSBEngine(tables, mode="jspim",
+                        schedule=schedule).run_all(["Q2.1"])["Q2.1"]
+        assert int(got[0]) == int(want[0]), schedule
+        assert np.array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+@pytest.mark.parametrize("cmd", ["entry_update", "index_update",
+                                 "table_update"])
+def test_update_commands_invalidate_hot_cold_path(tables, cmd):
+    """§3.2.3 updates must reach the hot_cold probe path: the hot table is
+    rebuilt from the live hash table inside the probe program, so a
+    reprobe after invalidation reflects the update."""
+    e = SSBEngine(tables, mode="jspim", schedule="hot_cold")
+    assert e.plans["date"].schedule == "hot_cold"
+    f0, r0 = e.probe_dim("date")
+    w = e.indexes["date"].table.bucket_width
+    if cmd == "entry_update":
+        e.entry_update("date", 0, 0, int(EMPTY_KEY), 0)
+        f1, _ = e.probe_dim("date")
+        assert int(f1.sum()) < int(f0.sum())
+    elif cmd == "index_update":
+        e.index_update("date", 5, 4242)
+        _, r1 = e.probe_dim("date")
+        rows = np.asarray(tables["lineorder"]["orderdate"]) == 5
+        assert (np.asarray(r1)[rows] == 4242).all()
+        assert not (np.asarray(r0)[rows] == 4242).any()
+    else:
+        e.table_update("date", jnp.asarray([0]),
+                       jnp.full((1, w), int(EMPTY_KEY), jnp.int32),
+                       jnp.zeros((1, w), jnp.int32))
+        f1, _ = e.probe_dim("date")
+        assert int(f1.sum()) < int(f0.sum())
+    assert e.cache_info()["invalidations"] == 1
+
+
+def test_build_stats_record_fact_skew(engine):
+    for dim, st in engine.build_stats.items():
+        fs = st.fact_skew
+        assert fs is not None
+        assert fs.n == int(engine.tables["lineorder"].n_rows)
+        assert 0 < fs.distinct <= st.n_unique
+        assert fs.dup_factor >= 1.0
+        assert 0 < fs.max_share <= 1.0
+        assert len(fs.top_share) > 0
+
+
+def test_explicit_schedule_override_is_honored(tables):
+    e = SSBEngine(tables, mode="jspim", schedule="deduped")
+    assert all(p.schedule == "deduped" for p in e.plans.values())
+    e2 = SSBEngine(tables, mode="jspim")  # auto keeps planner picks
+    assert all(p.schedule in ("gathered", "hot_cold")
+               for p in e2.plans.values())
+
+
 # -- build-stats / auto-grow -------------------------------------------------
 
 def test_build_dim_index_autogrows_on_overflow(tables):

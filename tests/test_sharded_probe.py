@@ -48,6 +48,36 @@ mesh = compat.make_mesh((4,), ("data",))
 idx = build_dim_index(tables["part"]["partkey"])
 pr = sharded_lookup(idx, tables["lineorder"]["partkey"], mesh)
 out["sharded_output"] = not pr.found.sharding.is_fully_replicated
+
+# hot_cold plan: hot table replicated per device, cold rows stay sharded
+from repro.core import measure_skew, plan_probe, top_keys
+from repro.core.dictionary import encode
+
+for dim_name, pk, fk_col, force_full in (("part", "partkey", "partkey", True),
+                                         ("date", "datekey", "orderdate",
+                                          False)):
+    fk = tables["lineorder"][fk_col][:10_001]
+    idx = build_dim_index(tables[dim_name][pk], fact_keys=fk)
+    st = idx.stats
+    plan = plan_probe(st.fact_skew, bucket_width=st.bucket_width,
+                      code_space=st.n_unique, force="hot_cold")
+    if plan.full_map and not force_full:
+        # exercise the partial-hot path too: shrink to a top-k hot set
+        import dataclasses as _dc
+        plan = _dc.replace(plan, full_map=False, hot_entries=256,
+                           hot_slots=512, cold_capacity=4096)
+    if plan.full_map:
+        hot = jnp.arange(plan.hot_entries, dtype=jnp.int32)
+    else:
+        hot = encode(idx.dictionary,
+                     jnp.asarray(top_keys(np.asarray(fk), plan.hot_entries)))
+    ref = lookup(idx, fk)
+    got = sharded_lookup(idx, fk, mesh, plan=plan, hot_codes=hot)
+    f = np.asarray(ref.found)
+    out[f"hot_cold_{{dim_name}}"] = bool(
+        np.array_equal(f, np.asarray(got.found))
+        and np.array_equal(np.asarray(ref.payload)[f],
+                           np.asarray(got.payload)[f]))
 print("RESULT::" + json.dumps(out))
 """
 
@@ -74,3 +104,9 @@ def test_sharded_probe_matches_single_device(result, key):
 
 def test_sharded_probe_output_stays_sharded(result):
     assert result["sharded_output"]
+
+
+@pytest.mark.parametrize("key", ["hot_cold_part", "hot_cold_date"])
+def test_sharded_hot_cold_matches_single_device(result, key):
+    """Replicated hot table + sharded cold rows == unsharded probe."""
+    assert result[key]
