@@ -1,0 +1,230 @@
+"""Streaming-ingest benchmark → ``BENCH_ingest.json``.
+
+Measures the delta-buffer maintenance path (``ingest_index`` +
+cost-model-driven ``compact_index``) against the seed's only alternative —
+rebuilding the index from scratch on every batch:
+
+* **amortized ingest throughput**: stream ``n_batches`` insert batches of
+  ~1% of the dimension through both paths; the headline check is the
+  delta path's total wall time ≥10x faster than rebuild-per-batch.
+* **probe slowdown vs delta fill**: warm gathered-probe wall time with the
+  delta at increasing occupancy, relative to the delta-free probe — the
+  recurring overlay tax ``plan_compaction`` amortizes away.
+* **oracle verification**: after the full ingest timeline (and again after
+  final compaction) the delta-aware probe must be bit-identical to an
+  index rebuilt from scratch over the logical key set.
+
+``--smoke`` shrinks sizes for CI; perf thresholds are asserted only in
+full runs (smoke sizes are dispatch-overhead-dominated).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+if __package__ in (None, ""):  # `python benchmarks/ingest_sweep.py` (CI)
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+from benchmarks.util import row
+from repro.core import pack_words, plan_compaction
+from repro.core.delta import delta_stats
+from repro.engine import (build_dim_index, compact_index, ingest_index,
+                          lookup)
+
+
+def _probe_fn():
+    return jax.jit(lambda ix, k: pack_words(lookup(ix, k)))
+
+
+def _time_warm(fn, *args, reps: int = 3) -> float:
+    jax.block_until_ready(fn(*args))  # compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def _ingest_timeline(n_dim: int, n_batches: int, probe_m: int,
+                     seed: int = 0) -> dict:
+    """Insert ``n_batches`` batches of ~1% of the dimension both ways.
+
+    One-shot by design: the stream is stateful (each batch mutates the
+    index), so there is no meaningful repetition of the whole timeline —
+    per-batch wall times are recorded individually instead."""
+    rng = np.random.default_rng(seed)
+    batch = max(8, n_dim // 100)
+    base = np.arange(n_dim, dtype=np.int32)
+    batches = [np.arange(n_dim + i * batch, n_dim + (i + 1) * batch,
+                         dtype=np.int32) for i in range(n_batches)]
+
+    # --- delta path: ingest + planner-driven compaction -------------------
+    ix = build_dim_index(jnp.asarray(base))
+    probe = _probe_fn()
+    timeline = []
+    t_total = 0.0
+    compactions = 0
+    for i, ks in enumerate(batches):
+        ps = np.arange(n_dim + i * batch, n_dim + (i + 1) * batch,
+                       dtype=np.int32)
+        t0 = time.perf_counter()
+        ix = ingest_index(ix, ks, ps, op="insert")
+        st = ix.stats
+        ds = delta_stats(ix.delta)
+        plan = plan_compaction(
+            delta_entries=ds.n_entries, delta_slots=ds.num_slots,
+            fill_frac=ds.fill_frac,
+            worst_bucket_frac=ds.worst_bucket_frac,
+            n_build=st.n_build, n_dict=int(ix.dictionary.n),
+            bucket_width=st.bucket_width, expected_probes=probe_m,
+            backend=jax.default_backend())
+        if plan.compact:
+            ix = compact_index(ix)
+            compactions += 1
+        jax.block_until_ready(ix.table.keys)
+        dt = time.perf_counter() - t0
+        t_total += dt
+        timeline.append({"batch": i, "ingest_s": round(dt, 6),
+                         "compacted": bool(plan.compact),
+                         "reason": plan.reason,
+                         "delta_entries": 0 if plan.compact
+                         else ds.n_entries})
+    delta_total = t_total
+
+    # --- rebuild-per-batch baseline ---------------------------------------
+    t_total = 0.0
+    keys_so_far = base
+    for ks in batches:
+        keys_so_far = np.concatenate([keys_so_far, ks])
+        t0 = time.perf_counter()
+        rebuilt = build_dim_index(jnp.asarray(keys_so_far))
+        jax.block_until_ready(rebuilt.table.keys)
+        t_total += time.perf_counter() - t0
+    rebuild_total = t_total
+
+    # --- oracle: delta path == rebuild-from-scratch, live and compacted ---
+    all_keys = np.concatenate([base] + batches)
+    stream = jnp.asarray(rng.choice(
+        np.concatenate([all_keys, [2_000_000_000 - 1]]), probe_m))
+    want = np.asarray(probe(rebuilt, stream))
+    live_ok = bool(np.array_equal(np.asarray(probe(ix, stream)), want))
+    ixc = compact_index(ix)
+    compact_ok = bool(np.array_equal(np.asarray(probe(ixc, stream)), want))
+
+    rows_ingested = n_batches * batch
+    return {
+        "n_dim": n_dim, "batch_rows": batch, "n_batches": n_batches,
+        "delta_total_s": round(delta_total, 6),
+        "rebuild_total_s": round(rebuild_total, 6),
+        "speedup_vs_rebuild": round(rebuild_total / delta_total, 3),
+        "delta_rows_per_s": round(rows_ingested / delta_total, 1),
+        "rebuild_rows_per_s": round(rows_ingested / rebuild_total, 1),
+        "compactions": compactions,
+        "oracle_identical_live": live_ok,
+        "oracle_identical_compacted": compact_ok,
+        "timeline": timeline,
+    }
+
+
+def _probe_slowdown(n_dim: int, probe_m: int, reps: int,
+                    seed: int = 0) -> dict:
+    """Warm probe wall time vs delta occupancy (the overlay tax)."""
+    rng = np.random.default_rng(seed)
+    base = np.arange(n_dim, dtype=np.int32)
+    ix0 = build_dim_index(jnp.asarray(base))
+    probe = _probe_fn()
+    stream = jnp.asarray(rng.choice(base, probe_m))
+    base_s = _time_warm(probe, ix0, stream, reps=reps)
+    out = {"n_dim": n_dim, "probe_m": probe_m,
+           "no_delta_warm_s": round(base_s, 6), "fills": {}}
+    want = np.asarray(probe(ix0, stream))
+    for frac in (0.05, 0.25, 0.5):
+        n_ops = max(1, int(n_dim * frac))
+        ks = np.arange(n_dim, n_dim + n_ops, dtype=np.int32)
+        ix = ingest_index(ix0, ks,
+                          np.arange(n_dim, n_dim + n_ops, dtype=np.int32),
+                          op="insert")
+        ds = delta_stats(ix.delta)
+        warm = _time_warm(probe, ix, stream, reps=reps)
+        out["fills"][f"{frac}"] = {
+            "delta_entries": ds.n_entries,
+            "delta_fill_frac": round(ds.fill_frac, 4),
+            "warm_s": round(warm, 6),
+            "slowdown_vs_no_delta": round(warm / base_s, 3),
+            # the overlay must never change results for pre-existing keys
+            "oracle_identical": bool(np.array_equal(
+                np.asarray(probe(ix, stream)), want)),
+        }
+    return out
+
+
+def collect(smoke: bool = False) -> dict:
+    if smoke:
+        n_dim, n_batches, probe_m, reps = 5_000, 10, 50_000, 1
+    else:
+        n_dim, n_batches, probe_m, reps = 200_000, 20, 1_000_000, 3
+    report: dict = {"benchmark": "ingest_sweep", "smoke": smoke,
+                    "backend": jax.default_backend()}
+    report["ingest"] = _ingest_timeline(n_dim, n_batches, probe_m)
+    report["probe_slowdown"] = _probe_slowdown(n_dim, probe_m, reps)
+    ing = report["ingest"]
+    report["checks"] = {
+        "oracle_identical": bool(
+            ing["oracle_identical_live"] and ing["oracle_identical_compacted"]
+            and all(f["oracle_identical"]
+                    for f in report["probe_slowdown"]["fills"].values())),
+        "ingest_speedup_vs_rebuild": ing["speedup_vs_rebuild"],
+        "ingest_speedup_target_10x": ing["speedup_vs_rebuild"] >= 10.0,
+    }
+    return report
+
+
+def write_json(path: str = "BENCH_ingest.json", smoke: bool = False) -> dict:
+    report = collect(smoke=smoke)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return report
+
+
+def run():
+    """CSV rows for the run.py orchestrator (also writes BENCH_ingest.json)."""
+    report = write_json()
+    ing = report["ingest"]
+    rows = [
+        row("ingest/delta_total", ing["delta_total_s"] * 1e6,
+            f"rows_per_s={ing['delta_rows_per_s']};"
+            f"compactions={ing['compactions']}"),
+        row("ingest/rebuild_total", ing["rebuild_total_s"] * 1e6,
+            f"speedup={ing['speedup_vs_rebuild']}x;"
+            f"oracle_ok={report['checks']['oracle_identical']}"),
+    ]
+    for frac, f in sorted(report["probe_slowdown"]["fills"].items()):
+        rows.append(row(f"ingest/probe_fill_{frac}", f["warm_s"] * 1e6,
+                        f"slowdown={f['slowdown_vs_no_delta']}x"))
+    return rows
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny sizes for CI (no perf assertions)")
+    p.add_argument("--out", default="BENCH_ingest.json")
+    args = p.parse_args()
+    report = write_json(args.out, smoke=args.smoke)
+    print(json.dumps(report["checks"], indent=2))
+    if not report["checks"]["oracle_identical"]:
+        raise SystemExit("delta-aware probe diverges from rebuild oracle")
+    if not args.smoke and not report["checks"]["ingest_speedup_target_10x"]:
+        raise SystemExit("amortized ingest < 10x faster than rebuild-per-batch")
+
+
+if __name__ == "__main__":
+    main()

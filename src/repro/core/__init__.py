@@ -7,29 +7,44 @@ Public surface:
     cost models (DDR4/PIM cycle model reproducing the paper's tables)
 """
 from repro.core.dictionary import (DICT_PAD, NO_CODE, Dictionary,
-                                   build_dictionary, decode, encode)
+                                   build_dictionary, decode, encode,
+                                   extend_dictionary)
 from repro.core.dedup import (Coalesced, coalesce, duplication_factor,
                               scatter_back, windowed_coalesce_mask)
+from repro.core.delta import (TOMBSTONE, DeltaStats, DeltaTable, apply_batch,
+                              delete_batch, delta_entries, delta_lookup,
+                              delta_stats, empty_delta, insert_batch,
+                              merge_entries, suggest_delta_buckets,
+                              upsert_batch)
 from repro.core.hash_table import (EMPTY_KEY, HASH_FIBONACCI, HASH_IDENTITY,
                                    JSPIMTable, build_table, entry_update,
                                    hash_bucket, index_update,
-                                   suggest_num_buckets, table_update)
+                                   suggest_num_buckets, table_entries,
+                                   table_update)
 from repro.core.lookup import (HotTable, JoinResult, ProbeResult,
                                build_hot_table, hot_hit_count, join,
-                               pack_words, probe, probe_deduped,
-                               probe_hot_cold, select_distinct,
+                               overlay_delta, pack_words, probe,
+                               probe_deduped, probe_hot_cold,
+                               probe_with_delta, select_distinct,
                                select_where_eq, unpack_words)
-from repro.core.planner import SchedulePlan, plan_probe, refine_plan
+from repro.core.planner import (CompactionPlan, SchedulePlan,
+                                plan_compaction, plan_probe, refine_plan)
 from repro.core.skew import SkewStats, measure_skew, top_keys
 
 __all__ = [
     "DICT_PAD", "NO_CODE", "Dictionary", "build_dictionary", "decode",
-    "encode", "Coalesced", "coalesce", "duplication_factor", "scatter_back",
-    "windowed_coalesce_mask", "EMPTY_KEY", "HASH_FIBONACCI", "HASH_IDENTITY",
+    "encode", "extend_dictionary", "Coalesced", "coalesce",
+    "duplication_factor", "scatter_back", "windowed_coalesce_mask",
+    "TOMBSTONE", "DeltaStats", "DeltaTable", "apply_batch", "delete_batch",
+    "delta_entries", "delta_lookup", "delta_stats", "empty_delta",
+    "insert_batch", "merge_entries", "suggest_delta_buckets", "upsert_batch",
+    "EMPTY_KEY", "HASH_FIBONACCI", "HASH_IDENTITY",
     "JSPIMTable", "build_table", "entry_update", "hash_bucket",
-    "index_update", "suggest_num_buckets", "table_update", "JoinResult",
-    "ProbeResult", "HotTable", "build_hot_table", "hot_hit_count",
-    "pack_words", "probe_hot_cold", "unpack_words", "join", "probe",
-    "probe_deduped", "select_distinct", "select_where_eq", "SchedulePlan",
-    "plan_probe", "refine_plan", "SkewStats", "measure_skew", "top_keys",
+    "index_update", "suggest_num_buckets", "table_entries", "table_update",
+    "JoinResult", "ProbeResult", "HotTable", "build_hot_table",
+    "hot_hit_count", "overlay_delta", "pack_words", "probe_hot_cold",
+    "probe_with_delta", "unpack_words", "join", "probe",
+    "probe_deduped", "select_distinct", "select_where_eq",
+    "CompactionPlan", "SchedulePlan", "plan_compaction", "plan_probe",
+    "refine_plan", "SkewStats", "measure_skew", "top_keys",
 ]

@@ -304,7 +304,7 @@ def _log2(n: int) -> float:
 
 def probe_schedule_seconds(schedule: str, *, n_probes: int, distinct: int,
                            bucket_width: int, cold_capacity: int = 0,
-                           hot_slots: int = 0,
+                           hot_slots: int = 0, delta_slots: int = 0,
                            backend: str = "cpu") -> float:
     """Modeled wall seconds of one probe schedule on ``backend``.
 
@@ -355,7 +355,64 @@ def probe_schedule_seconds(schedule: str, *, n_probes: int, distinct: int,
                    + activations(uniq, uniq))
     else:
         raise ValueError(f"unknown schedule {schedule!r}")
+    if delta_slots > 0:  # un-merged ingest: every schedule pays the overlay
+        ns += delta_overlay_seconds(n_probes, delta_slots,
+                                    bucket_width=bucket_width,
+                                    backend=backend) * 1e9
     return (ns + _SCHEDULE_OPS[schedule] * c.op_ns) * 1e-9
+
+
+# --------------------------------------------------------------------------
+# Ingest pricing: delta-overlay occupancy, bucket-local merge, full rebuild
+# (planner input, core/planner.py:plan_compaction)
+# --------------------------------------------------------------------------
+
+
+def delta_overlay_seconds(n_probes: int, delta_slots: int,
+                          bucket_width: int = 8,
+                          backend: str = "cpu") -> float:
+    """Per-stream cost of consulting the delta side-table during probes.
+
+    One bucket gather into the (small, usually cache-resident) delta plus a
+    select per probe.  This is the running tax every query pays while the
+    delta is non-empty — the quantity compaction amortizes away.
+    """
+    c = HOST_COSTS.get(backend, HOST_COSTS["cpu"])
+    row_bytes = 2 * bucket_width * 4
+    rate = (c.cached_gather_ns_per_byte
+            if delta_slots * 8 <= c.cache_bytes else c.gather_ns_per_byte)
+    ns = (n_probes * (row_bytes * rate + bucket_width * c.lane_ns
+                      + c.pass_ns)
+          + 3 * c.op_ns)
+    return ns * 1e-9
+
+
+def merge_seconds(n_delta: int, n_dict: int, bucket_width: int,
+                  backend: str = "cpu") -> float:
+    """Bucket-local compaction: dictionary positional merge + two scatter
+    phases over the delta entries' bucket rows.  O(n_dict + n_delta), no
+    sort over the build column."""
+    c = HOST_COSTS.get(backend, HOST_COSTS["cpu"])
+    row_bytes = 2 * bucket_width * 4
+    ns = (3.0 * (n_dict + n_delta) * c.pass_ns          # dictionary merge
+          + n_delta * _log2(max(2, n_dict)) * c.pass_ns  # cross searchsorted
+          + 2.0 * n_delta * (row_bytes * c.gather_ns_per_byte
+                             + bucket_width * c.lane_ns)  # phase-1/2 rows
+          + 8 * c.op_ns)
+    return ns * 1e-9
+
+
+def rebuild_seconds(n_build: int, bucket_width: int,
+                    backend: str = "cpu") -> float:
+    """Full sort-based rebuild (``build_table`` + dictionary re-sort):
+    two argsorts over the build column plus segment/scatter passes —
+    the cost the delta path exists to avoid."""
+    c = HOST_COSTS.get(backend, HOST_COSTS["cpu"])
+    n = max(2, n_build)
+    ns = (3.0 * n * _log2(n) * c.sort_ns_per_elem_log2
+          + 8.0 * n * c.pass_ns
+          + 10 * c.op_ns)
+    return ns * 1e-9
 
 
 def data_overhead_bytes(n_fact: int, n_dim: int, dup_total: int,

@@ -1,0 +1,330 @@
+"""Delta side-table: batched index maintenance without rebuilds (§3.2.3+).
+
+The paper's update commands mutate single entries of the PIM-resident hash
+dataset; anything larger (appending dimension rows, bulk deletes) would
+force a full sort-based rebuild of table *and* dictionary.  The delta
+buffer makes ingest incremental:
+
+* A ``DeltaTable`` is a small bucketed hash map in the **same layout** as
+  the main ``JSPIMTable`` (keys row + words row per bucket), absorbing
+  ``insert_batch`` / ``upsert_batch`` / ``delete_batch`` (tombstones) as
+  functional updates.  One entry per key, last write wins — the delta holds
+  the *net* effect of every op since the last compaction.
+* Probes consult main table then delta in one fused pass
+  (``core/lookup.py:probe_with_delta``): the delta probe is a single extra
+  bucket gather and the merge is one select, because a tombstone's stored
+  word **is** ``NULL_WORD`` — overriding the main result with it yields a
+  miss with no special-casing.
+* ``merge_entries`` folds the delta into the main table **bucket-locally**:
+  deletes clear their cell, updates overwrite their word in place, inserts
+  take the k-th empty slot of their target bucket — no sort over the build
+  column.  Only when a bucket runs out of empty slots does the caller fall
+  back to a full ``build_table`` with doubled geometry
+  (``engine/join.py:compact_index``).
+
+All ops are fixed-shape and jit-able; geometry decisions (sizing, growth,
+compaction) happen eagerly at the engine layer, mirroring
+``build_dim_index``'s auto-grow loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hash_table import (EMPTY_KEY, HASH_FIBONACCI, JSPIMTable,
+                                   hash_bucket)
+
+# A tombstone's stored word: identical to ``lookup.NULL_WORD`` (payload -1,
+# is_dup 0) so that selecting it over the main probe result is a miss.
+TOMBSTONE = jnp.int32(-2)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeltaTable:
+    """Small bucketed hash map holding the net not-yet-merged ops.
+
+    ``keys[b, s]`` is the key owning slot ``s`` of bucket ``b`` (EMPTY_KEY
+    if free) and ``words[b, s]`` its packed value word — ``payload << 1``
+    for inserts/upserts, ``TOMBSTONE`` for deletes.  ``fill[b]`` counts the
+    occupied slots of bucket ``b`` (tombstones included: a tombstone is a
+    live *op*).  Keys live in whatever space the owner probes with — raw
+    dimension keys at the engine layer (new keys have no dictionary code
+    yet), so the default hash is Fibonacci, not identity.
+    """
+
+    keys: jax.Array    # (num_buckets, bucket_width) int32, EMPTY_KEY padded
+    words: jax.Array   # (num_buckets, bucket_width) int32 packed words
+    fill: jax.Array    # (num_buckets,) int32 occupied slots per bucket
+    n_ops: jax.Array   # () int32 batch entries absorbed since creation
+    overflow: jax.Array  # () bool — an entry could not be placed
+    hash_mode: str = dataclasses.field(metadata={"static": True},
+                                       default=HASH_FIBONACCI)
+
+    @property
+    def num_buckets(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def bucket_width(self) -> int:
+        return self.keys.shape[1]
+
+    @property
+    def num_slots(self) -> int:
+        return self.keys.shape[0] * self.keys.shape[1]
+
+
+def empty_delta(num_buckets: int, bucket_width: int = 8,
+                hash_mode: str = HASH_FIBONACCI) -> DeltaTable:
+    """A fresh delta buffer.  ``num_buckets`` must be a power of two."""
+    assert num_buckets & (num_buckets - 1) == 0, "num_buckets must be pow2"
+    return DeltaTable(
+        keys=jnp.full((num_buckets, bucket_width), EMPTY_KEY, jnp.int32),
+        words=jnp.zeros((num_buckets, bucket_width), jnp.int32),
+        fill=jnp.zeros((num_buckets,), jnp.int32),
+        n_ops=jnp.int32(0),
+        overflow=jnp.bool_(False),
+        hash_mode=hash_mode,
+    )
+
+
+def suggest_delta_buckets(n_build: int, bucket_width: int = 8,
+                          frac: float = 0.125) -> int:
+    """Power-of-two delta bucket count sized to a fraction of the build.
+
+    The delta is meant to stay small relative to the main table (its probe
+    is a pure overlay gather); ``frac`` of the build rows at load 0.5
+    leaves ample headroom before the planner triggers compaction.
+    """
+    want = max(256, int(n_build * frac)) / (bucket_width * 0.5)
+    return 1 << max(0, int(want) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaStats:
+    """Host-side occupancy summary (planner input for compaction)."""
+
+    n_entries: int      # occupied slots (net ops: inserts/upserts+tombstones)
+    n_tombstones: int
+    num_slots: int
+    max_bucket_fill: int
+    bucket_width: int
+
+    @property
+    def fill_frac(self) -> float:
+        return self.n_entries / max(1, self.num_slots)
+
+    @property
+    def worst_bucket_frac(self) -> float:
+        return self.max_bucket_fill / max(1, self.bucket_width)
+
+
+def delta_stats(delta: DeltaTable) -> DeltaStats:
+    """Concrete (eager) occupancy of a delta buffer."""
+    occupied = jnp.asarray(delta.keys != EMPTY_KEY)
+    return DeltaStats(
+        n_entries=int(occupied.sum()),
+        n_tombstones=int((occupied & (delta.words == TOMBSTONE)).sum()),
+        num_slots=delta.num_slots,
+        max_bucket_fill=int(delta.fill.max()),
+        bucket_width=delta.bucket_width,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched ops (fixed-shape, jit-able)
+# ---------------------------------------------------------------------------
+
+
+def _bucket_rank(mask: jax.Array, bkt: jax.Array, nb: int) -> jax.Array:
+    """Rank of each masked entry among same-bucket masked entries (0-based).
+
+    The positional idiom shared by batch-apply and merge: park unmasked
+    entries past the last bucket, group by bucket with a stable sort, and
+    subtract each group's first sorted position.  Unmasked entries get
+    arbitrary ranks (callers gate on ``mask``).
+    """
+    n = mask.shape[0]
+    bkey = jnp.where(mask, bkt, nb)
+    order = jnp.argsort(bkey, stable=True)
+    bs = bkey[order]
+    rank_sorted = (jnp.arange(n, dtype=jnp.int32)
+                   - jnp.searchsorted(bs, bs).astype(jnp.int32))
+    return jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+
+
+def apply_batch(delta: DeltaTable, keys: jax.Array,
+                words: jax.Array) -> DeltaTable:
+    """Upsert a batch of (key, packed word) pairs; last occurrence wins.
+
+    Existing keys are overwritten in place; new keys take the next free
+    slots of their bucket.  A bucket with no free slot sets ``overflow``
+    and drops the entry — callers grow the delta (``engine/join.py:
+    ingest_index``) so ingest stays lossless.
+    """
+    b = keys.shape[0]
+    nb, bw = delta.keys.shape
+    keys = keys.astype(jnp.int32)
+    words = words.astype(jnp.int32)
+
+    # last-wins intra-batch dedup: stable key sort keeps arrival order
+    # within equal keys, so the last element of each run is the newest op
+    order = jnp.argsort(keys, stable=True)
+    sk, sw = keys[order], words[order]
+    is_last = jnp.concatenate([sk[:-1] != sk[1:], jnp.ones((1,), bool)])
+    valid = is_last & (sk != EMPTY_KEY)
+
+    bkt = hash_bucket(sk, nb, delta.hash_mode)
+    rows = delta.keys[bkt]                     # (b, bw)
+    match = rows == sk[:, None]
+    found = match.any(axis=-1) & valid
+    slot_existing = jnp.argmax(match, axis=-1)
+
+    # fresh entries: rank within their bucket -> fill[bucket] + rank
+    is_new = valid & ~found
+    slot_new = delta.fill[bkt] + _bucket_rank(is_new, bkt, nb)
+    placed = is_new & (slot_new < bw)
+    overflow_now = (is_new & (slot_new >= bw)).any()
+
+    slot = jnp.where(found, slot_existing, slot_new)
+    write = found | placed
+    flat = jnp.where(write, bkt * bw + slot, nb * bw)
+    new_keys = delta.keys.reshape(-1).at[flat].set(sk, mode="drop")
+    new_words = delta.words.reshape(-1).at[flat].set(sw, mode="drop")
+    inc = jax.ops.segment_sum(placed.astype(jnp.int32), bkt, num_segments=nb)
+    return dataclasses.replace(
+        delta,
+        keys=new_keys.reshape(nb, bw),
+        words=new_words.reshape(nb, bw),
+        fill=delta.fill + inc,
+        n_ops=delta.n_ops + jnp.int32(b),
+        overflow=delta.overflow | overflow_now,
+    )
+
+
+def insert_batch(delta: DeltaTable, keys: jax.Array,
+                 payloads: jax.Array) -> DeltaTable:
+    """Insert (or overwrite) ``key -> payload`` mappings."""
+    return apply_batch(delta, keys, payloads.astype(jnp.int32) << 1)
+
+
+# upsert == insert at the delta level: one entry per key, last write wins.
+upsert_batch = insert_batch
+
+
+def delete_batch(delta: DeltaTable, keys: jax.Array) -> DeltaTable:
+    """Tombstone ``keys``: probes report them missing until compaction."""
+    return apply_batch(delta, keys,
+                       jnp.full(keys.shape, TOMBSTONE, jnp.int32))
+
+
+def delta_lookup(delta: DeltaTable, keys: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """(hit, packed word) per key — one bucket gather, same comparator-array
+    semantics as the main probe.  A tombstone hit returns ``TOMBSTONE``
+    (== ``NULL_WORD``), so callers can select it over the main result
+    directly."""
+    k = keys.astype(jnp.int32)
+    bkt = hash_bucket(k, delta.num_buckets, delta.hash_mode)
+    rows_k = delta.keys[bkt]
+    rows_w = delta.words[bkt]
+    match = rows_k == k[:, None]
+    hit = match.any(axis=-1) & (k != EMPTY_KEY)
+    slot = jnp.argmax(match, axis=-1)
+    word = jnp.take_along_axis(rows_w, slot[:, None], axis=-1)[:, 0]
+    return hit, word
+
+
+def delta_entries(delta: DeltaTable
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Flat (keys, words, live) view of the buffered ops (merge input)."""
+    k = delta.keys.reshape(-1)
+    w = delta.words.reshape(-1)
+    return k, w, k != EMPTY_KEY
+
+
+# ---------------------------------------------------------------------------
+# Merge/compaction: fold delta entries into the main table bucket-locally
+# ---------------------------------------------------------------------------
+
+
+def merge_entries(table: JSPIMTable, codes: jax.Array, words: jax.Array,
+                  live: jax.Array) -> tuple[JSPIMTable, jax.Array]:
+    """Fold (code, word) ops into ``table`` with bucket-local scatters.
+
+    ``codes`` are keys in the table's own key space (dictionary codes at
+    the engine layer — new keys must have been assigned codes first, see
+    ``dictionary.extend_dictionary``).  Three op classes, applied in two
+    phases so a delete can free the slot an insert then takes:
+
+    1. deletes (word == TOMBSTONE, code present) clear their cell; updates
+       (code present) overwrite their value word in place;
+    2. inserts (code absent, not a tombstone) take the k-th empty slot of
+       their bucket, ranked like the build's positional scatter.
+
+    Returns ``(merged, needs_grow)`` — ``needs_grow`` is True when some
+    insert found no empty slot in its bucket, in which case the merged
+    table is NOT complete and the caller must rebuild with more buckets
+    (``build_table``; the only remaining full-rebuild trigger).
+    """
+    nb, bw = table.keys.shape
+    codes = codes.astype(jnp.int32)
+    words = words.astype(jnp.int32)
+    live = live & (codes != EMPTY_KEY)
+    is_tomb = words == TOMBSTONE
+
+    bkt = hash_bucket(codes, nb, table.hash_mode)
+    rows_k = table.keys[bkt]                     # (d, bw)
+    match = rows_k == codes[:, None]
+    found = match.any(axis=-1) & live
+    slot = jnp.argmax(match, axis=-1)
+    cur_word = jnp.take_along_axis(table.values[bkt], slot[:, None],
+                                   axis=-1)[:, 0]
+    cur_dup = (cur_word & 1) == 1
+    cur_rows = jnp.where(
+        cur_dup,
+        table.group_count[jnp.clip(cur_word >> 1, 0,
+                                   table.group_count.shape[0] - 1)], 1)
+
+    # ---- phase 1: deletes clear, updates overwrite ----------------------
+    del_mask = found & is_tomb
+    upd_mask = found & ~is_tomb
+    flat = bkt * bw + slot
+    park = nb * bw
+    keys1 = table.keys.reshape(-1).at[
+        jnp.where(del_mask, flat, park)].set(EMPTY_KEY, mode="drop")
+    vals1 = table.values.reshape(-1).at[
+        jnp.where(del_mask, flat, park)].set(0, mode="drop")
+    vals1 = vals1.at[jnp.where(upd_mask, flat, park)].set(words, mode="drop")
+
+    # ---- phase 2: inserts take the k-th empty slot of their bucket -------
+    ins = live & ~found & ~is_tomb
+    rows1 = keys1.reshape(nb, bw)[bkt]           # post-delete bucket rows
+    empty = rows1 == EMPTY_KEY
+    rank = _bucket_rank(ins, bkt, nb)
+    # index of the (rank+1)-th empty lane: cumsum is nondecreasing and
+    # increments exactly at empty lanes, so the first position reaching
+    # rank+1 is itself empty; bw when the bucket has too few empties
+    ecum = jnp.cumsum(empty.astype(jnp.int32), axis=-1)
+    slot_ins = (ecum < (rank + 1)[:, None]).sum(axis=-1).astype(jnp.int32)
+    placed = ins & (slot_ins < bw)
+    needs_grow = (ins & (slot_ins >= bw)).any()
+    flat_ins = jnp.where(placed, bkt * bw + slot_ins, park)
+    keys2 = keys1.at[flat_ins].set(codes, mode="drop")
+    vals2 = vals1.at[flat_ins].set(words, mode="drop")
+
+    n_ins = placed.sum().astype(jnp.int32)
+    n_del = del_mask.sum().astype(jnp.int32)
+    rows_removed = jnp.where(del_mask, cur_rows, 0).sum()
+    rows_collapsed = jnp.where(upd_mask, cur_rows - 1, 0).sum()
+    merged = dataclasses.replace(
+        table,
+        keys=keys2.reshape(nb, bw),
+        values=vals2.reshape(nb, bw),
+        n_unique=table.n_unique + n_ins - n_del,
+        n_build=(table.n_build + n_ins
+                 - (rows_removed + rows_collapsed).astype(jnp.int32)),
+    )
+    return merged, needs_grow

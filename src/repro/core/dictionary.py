@@ -10,11 +10,20 @@ All functions are fixed-shape / jit-able.  The dictionary is a sorted array
 padded with ``DICT_PAD`` so that ``searchsorted`` gives O(log n) encode and a
 single gather gives O(1) decode (the paper: "decoding ... involves just a
 lookup, which benefits from our optimized search engine").
+
+**Streaming ingest** breaks the seed's "code == sorted rank" identity: a
+key inserted mid-order would shift every later rank, invalidating all codes
+stored in the hash table.  ``Dictionary.codes`` decouples the two — the
+array stays sorted (one ``searchsorted`` encode) while each slot carries an
+explicit code, so existing codes survive inserts and new keys take fresh
+codes past the old ``n``.  ``extend_dictionary`` performs the merge
+incrementally (searchsorted + positional scatter, no re-sort).
 """
 from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -27,10 +36,14 @@ NO_CODE = jnp.int32(-1)
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class Dictionary:
-    """Sorted unique raw keys; the code of a key is its sorted rank."""
+    """Sorted unique raw keys; the code of a key is its sorted rank —
+    unless ``codes`` is present (post-ingest), in which case slot ``i``'s
+    key explicitly maps to ``codes[i]`` (codes stay dense 0..n-1, just no
+    longer rank-ordered)."""
 
     keys: jax.Array  # (capacity,) int32, sorted, padded with DICT_PAD
     n: jax.Array     # () int32, number of live entries
+    codes: jax.Array | None = None  # (capacity,) int32 code per slot
 
     @property
     def capacity(self) -> int:
@@ -44,6 +57,9 @@ def build_dictionary(raw_keys: jax.Array, capacity: int) -> Dictionary:
     padded.  Returns dense codes 0..n-1 in raw-key sorted order.
     """
     raw_keys = raw_keys.astype(jnp.int32)
+    if raw_keys.shape[0] == 0:  # empty build: all-pad dictionary
+        return Dictionary(keys=jnp.full((capacity,), DICT_PAD, jnp.int32),
+                          n=jnp.int32(0))
     sk = jnp.sort(raw_keys)
     is_first = jnp.concatenate(
         [jnp.ones((1,), bool), sk[1:] != sk[:-1]])
@@ -62,11 +78,72 @@ def encode(d: Dictionary, raw_keys: jax.Array) -> jax.Array:
     pos = jnp.searchsorted(d.keys, raw_keys).astype(jnp.int32)
     pos_c = jnp.minimum(pos, d.capacity - 1)
     hit = (d.keys[pos_c] == raw_keys) & (pos < d.n)
-    return jnp.where(hit, pos_c, NO_CODE)
+    code = pos_c if d.codes is None else d.codes[pos_c]
+    return jnp.where(hit, code, NO_CODE)
 
 
 def decode(d: Dictionary, codes: jax.Array) -> jax.Array:
     """dense code -> raw key (DICT_PAD for NO_CODE / out-of-range codes)."""
     codes = codes.astype(jnp.int32)
     ok = (codes >= 0) & (codes < d.n)
-    return jnp.where(ok, d.keys[jnp.clip(codes, 0, d.capacity - 1)], DICT_PAD)
+    if d.codes is None:
+        key_by_code = d.keys
+    else:  # invert the slot->code permutation (pad slots map to themselves)
+        key_by_code = jnp.full((d.capacity,), DICT_PAD, jnp.int32).at[
+            d.codes].set(d.keys, mode="drop")
+    return jnp.where(ok, key_by_code[jnp.clip(codes, 0, d.capacity - 1)],
+                     DICT_PAD)
+
+
+def extend_dictionary(d: Dictionary, new_keys: np.ndarray
+                      ) -> tuple[Dictionary, np.ndarray]:
+    """Merge sorted-unique ``new_keys`` (none already present) into ``d``.
+
+    The incremental dictionary maintenance behind delta compaction: an
+    O(n + b) positional merge (searchsorted for cross-ranks, two scatters)
+    instead of re-sorting the key column.  Existing codes are untouched;
+    new keys receive codes ``n .. n+b-1`` in their sorted order.  Returns
+    the grown dictionary and the new keys' codes.  Host-side (eager), like
+    ``build_dim_index``'s geometry loop.
+
+    Capacity is padded to a power of two: every jitted consumer (probe
+    programs, the engine's compiled queries) is shape-keyed on the
+    dictionary arrays, so steady small-batch ingest must not mint a fresh
+    capacity — and a fresh compilation — per compaction.
+    """
+    new_keys = np.asarray(new_keys, np.int32)
+    b = int(new_keys.shape[0])
+    n = int(d.n)
+    if b == 0:
+        return d, np.zeros((0,), np.int32)
+    assert np.all(new_keys[1:] > new_keys[:-1]), "new keys must be sorted unique"
+    old_keys = np.asarray(d.keys)[:n]
+    old_codes = (np.arange(n, dtype=np.int32) if d.codes is None
+                 else np.asarray(d.codes)[:n])
+    new_codes = n + np.arange(b, dtype=np.int32)
+    # stable two-way merge positions (key sets are disjoint)
+    pos_old = np.arange(n) + np.searchsorted(new_keys, old_keys)
+    pos_new = np.searchsorted(old_keys, new_keys) + np.arange(b)
+    cap = max(d.capacity, 1 << (n + b - 1).bit_length())
+    keys_out = np.full((cap,), int(DICT_PAD), np.int32)
+    codes_out = np.arange(cap, dtype=np.int32)  # pad slots map to themselves
+    keys_out[pos_old] = old_keys
+    keys_out[pos_new] = new_keys
+    codes_out[pos_old] = old_codes
+    codes_out[pos_new] = new_codes
+    return Dictionary(keys=jnp.asarray(keys_out), n=jnp.int32(n + b),
+                      codes=jnp.asarray(codes_out)), new_codes
+
+
+def encode_np(d: Dictionary, raw_keys: np.ndarray) -> np.ndarray:
+    """Host-side ``encode`` (numpy).  The compaction path classifies delta
+    ops eagerly; going through the jnp encode would compile a fresh
+    searchsorted per dictionary shape."""
+    raw_keys = np.asarray(raw_keys, np.int32)
+    keys = np.asarray(d.keys)
+    n = int(d.n)
+    pos = np.searchsorted(keys, raw_keys)
+    pos_c = np.minimum(pos, keys.shape[0] - 1)
+    hit = (keys[pos_c] == raw_keys) & (pos < n)
+    codes = pos_c if d.codes is None else np.asarray(d.codes)[pos_c]
+    return np.where(hit, codes, int(NO_CODE)).astype(np.int32)

@@ -41,7 +41,12 @@ def hash_bucket(keys: jax.Array, num_buckets: int, mode: str) -> jax.Array:
     if mode == HASH_IDENTITY:
         return (keys & mask).astype(jnp.int32)
     if mode == HASH_FIBONACCI:
-        h = (keys.astype(jnp.uint32) * _FIB) >> jnp.uint32(17)
+        # take the TOP log2(num_buckets) bits of the multiplicative mix: a
+        # fixed shift caps the usable bucket bits (a former ``>> 17``
+        # meant geometries past 2^15 buckets could never separate keys,
+        # turning overflow-driven growth loops into livelocks)
+        bits = max(1, (num_buckets - 1).bit_length())
+        h = (keys.astype(jnp.uint32) * _FIB) >> jnp.uint32(32 - bits)
         return (h & jnp.uint32(mask)).astype(jnp.int32)
     raise ValueError(f"unknown hash mode {mode!r}")
 
@@ -109,6 +114,18 @@ def build_table(
     keys = keys.astype(jnp.int32)
     values = values.astype(jnp.int32)
     n = keys.shape[0]
+    if n == 0:
+        # empty build: a valid all-empty table (every probe misses).  The
+        # CSR arrays keep one padding slot so downstream clipped gathers
+        # (_expand, merge_entries) never touch a zero-length operand.
+        return JSPIMTable(
+            keys=jnp.full((num_buckets, bucket_width), EMPTY_KEY, jnp.int32),
+            values=jnp.zeros((num_buckets, bucket_width), jnp.int32),
+            dup_offsets=jnp.zeros((2,), jnp.int32),
+            dup_indices=jnp.zeros((1,), jnp.int32),
+            group_count=jnp.zeros((1,), jnp.int32),
+            n_unique=jnp.int32(0), n_build=jnp.int32(0),
+            overflow=jnp.int32(0), hash_mode=hash_mode)
     g = _group(keys, values)
 
     # ---- duplication table (CSR over *all* groups; only dup groups are
@@ -167,6 +184,47 @@ def suggest_num_buckets(n_unique: int, bucket_width: int = 128,
     """Power-of-two bucket count targeting ``load`` occupancy."""
     need = max(1, int(n_unique / (bucket_width * load)))
     return 1 << (need - 1).bit_length()
+
+
+def table_entries(table: JSPIMTable
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Reconstruct the live logical (key, payload) multiset from a table.
+
+    Inverse of ``build_table`` modulo ordering: every non-dup entry yields
+    one row, every dup entry expands its CSR group.  The hash-table cells
+    are authoritative (entries removed by delta merges or §3.2.3 updates do
+    not resurrect from stale CSR garbage).  Fixed shape — capacity is
+    ``num_slots + len(dup_indices)`` (a safe upper bound); returns
+    ``(keys, payloads, valid)``.  This is the full-rebuild path's input:
+    compaction falls back to ``build_table(*table_entries(...))`` when
+    bucket-local merging runs out of slots.
+    """
+    flat_k = table.keys.reshape(-1)
+    flat_v = table.values.reshape(-1)
+    m = flat_k.shape[0]
+    live = flat_k != EMPTY_KEY
+    is_dup = (flat_v & 1) == 1
+    payload = flat_v >> 1
+    ng = table.group_count.shape[0]
+    counts = jnp.where(
+        live, jnp.where(is_dup,
+                        table.group_count[jnp.clip(payload, 0, ng - 1)], 1),
+        0).astype(jnp.int32)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(counts).astype(jnp.int32)])
+    total = offs[-1]
+    cap = m + table.dup_indices.shape[0]
+    out_pos = jnp.arange(cap, dtype=jnp.int32)
+    src = (jnp.searchsorted(offs, out_pos, side="right") - 1).astype(jnp.int32)
+    src_c = jnp.clip(src, 0, m - 1)
+    within = out_pos - offs[src_c]
+    grp = jnp.clip(payload[src_c], 0, table.dup_offsets.shape[0] - 2)
+    dup_row = table.dup_indices[jnp.clip(
+        table.dup_offsets[grp] + within, 0, table.dup_indices.shape[0] - 1)]
+    val = jnp.where(is_dup[src_c], dup_row, payload[src_c])
+    valid = out_pos < total
+    return (jnp.where(valid, flat_k[src_c], EMPTY_KEY),
+            jnp.where(valid, val, 0), valid)
 
 
 # ---------------------------------------------------------------------------

@@ -20,6 +20,12 @@ Three probe schedules:
                    streams are scatter-merged.  A skewed stream costs
                    ~``distinct`` bucket activations instead of ~``n``.
 
+Every schedule has a **delta-aware** flavor (``probe_with_delta`` /
+``overlay_delta``): buffered ingest ops in a ``core/delta.py`` side-table
+are consulted after the main table in the same fused program — one extra
+bucket gather and a select, with tombstones reading as misses because
+their stored word is ``NULL_WORD``.
+
 ``join`` expands matches through the duplication table (CSR) with a fixed
 output capacity; ``select_where_eq`` and ``select_distinct`` are the paper's
 SELECT paths.  Pure-JAX implementations here double as the oracle for the
@@ -33,11 +39,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dedup
+from repro.core.delta import TOMBSTONE, DeltaTable, delta_lookup
 from repro.core.hash_table import EMPTY_KEY, JSPIMTable, hash_bucket
 
 # packed value word meaning "no match" (same convention as kernels/ref.py:
 # payload -1, is_dup 0 -> (-1 << 1) | 0 == -2)
 NULL_WORD = jnp.int32(-2)
+assert int(TOMBSTONE) == int(NULL_WORD), "tombstone must read as a miss"
 
 
 class ProbeResult(NamedTuple):
@@ -191,6 +199,56 @@ def probe_hot_cold(table: JSPIMTable, probe_keys: jax.Array, hot: HotTable,
                          lambda _: pack_words(probe(table, codes)),
                          split_path, None)
     return unpack_words(words)
+
+
+# ---------------------------------------------------------------------------
+# Delta-aware probe: main table then delta side-table in one fused pass
+# ---------------------------------------------------------------------------
+
+
+def overlay_delta(pr: ProbeResult, delta: DeltaTable,
+                  delta_keys: jax.Array) -> ProbeResult:
+    """Overlay buffered ingest ops on a main-table probe result.
+
+    One extra bucket gather (the delta is small) plus one select: a delta
+    hit overrides the main result with its stored word, and because a
+    tombstone's word **is** ``NULL_WORD`` a deleted key comes out as a
+    miss with no special-casing.  ``delta_keys`` are the probe keys in the
+    *delta's* key space (raw fact keys at the engine layer, where the main
+    table is probed with dictionary codes).
+    """
+    hit, word = delta_lookup(delta, delta_keys)
+    return unpack_words(jnp.where(hit, word, pack_words(pr)))
+
+
+def probe_with_delta(table: JSPIMTable, delta: DeltaTable,
+                     probe_keys: jax.Array, *,
+                     delta_keys: jax.Array | None = None,
+                     schedule: str = "gathered",
+                     hot: HotTable | None = None,
+                     cold_capacity: int = 0, dedup_cold: bool = True,
+                     unique_capacity: int | None = None) -> ProbeResult:
+    """Delta-aware variant of every probe schedule.
+
+    Dispatches the main probe through ``schedule`` (gathered / deduped /
+    hot_cold — the same planned geometry arguments as the plain paths)
+    and fuses the delta overlay into the same program.  Bit-identical to
+    compacting the delta into the table and probing that.
+    """
+    dk = probe_keys if delta_keys is None else delta_keys
+    if schedule == "gathered":
+        pr = probe(table, probe_keys)
+    elif schedule == "deduped":
+        pr = probe_deduped(table, probe_keys, unique_capacity)
+    elif schedule == "hot_cold":
+        if hot is None:
+            raise ValueError("hot_cold needs a HotTable")
+        pr = probe_hot_cold(table, probe_keys, hot,
+                            cold_capacity=cold_capacity,
+                            dedup_cold=dedup_cold)
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+    return overlay_delta(pr, delta, dk)
 
 
 class JoinResult(NamedTuple):

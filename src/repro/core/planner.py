@@ -43,6 +43,14 @@ MIN_ADAPTIVE_PROBES = 100_000
 # planner's collision-blind coverage estimate; the engine tightens it to
 # the exact count, and probe_hot_cold falls back on overflow regardless).
 COLD_SLACK = 1.3
+# Compact once the delta holds this fraction of its slots: Fibonacci
+# hashing spreads keys uniformly, but a 2x-mean bucket is routine, so
+# compacting at half full keeps per-bucket overflow (which forces a delta
+# grow + full re-apply) rare.
+MAX_DELTA_FILL = 0.5
+# ...or once any single delta bucket is this close to its width (the
+# actual overflow hazard — fill_frac is only its mean-field proxy).
+MAX_DELTA_BUCKET_FILL = 0.75
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,7 +94,7 @@ def hot_geometry(stats: SkewStats, hot_entries: int,
 
 def plan_probe(stats: SkewStats, *, bucket_width: int, backend: str = "cpu",
                impl: str = "xla", code_space: int | None = None,
-               hash_mode: str = "identity",
+               hash_mode: str = "identity", delta_slots: int = 0,
                force: str | None = None) -> SchedulePlan:
     """Pick the probe schedule for one dimension from its fact-side stats.
 
@@ -106,7 +114,8 @@ def plan_probe(stats: SkewStats, *, bucket_width: int, backend: str = "cpu",
     def est(schedule: str, **kw) -> float:
         return costmodel.probe_schedule_seconds(
             schedule, n_probes=m, distinct=distinct,
-            bucket_width=bucket_width, backend=backend, **kw)
+            bucket_width=bucket_width, backend=backend,
+            delta_slots=delta_slots, **kw)
 
     # best hot-table size among the measured grid points
     if full_map:
@@ -170,6 +179,58 @@ def plan_probe(stats: SkewStats, *, bucket_width: int, backend: str = "cpu",
         dedup_cold=True,
         est_seconds=tuple(sorted(ests.items())),
     )
+
+
+# ---------------------------------------------------------------------------
+# Ingest planning: when does the delta fold back into the main table?
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPlan:
+    """Hashable compact-or-defer decision for one dimension's delta."""
+
+    compact: bool
+    reason: str          # "fill" | "bucket" | "amortized" | "defer" | "empty"
+    est_overlay_s: float  # per-probe-stream delta-overlay tax right now
+    est_merge_s: float    # one bucket-local compaction
+    est_rebuild_s: float  # the full sort-based rebuild being avoided
+
+
+def plan_compaction(*, delta_entries: int, delta_slots: int,
+                    fill_frac: float, worst_bucket_frac: float = 0.0,
+                    n_build: int, n_dict: int, bucket_width: int,
+                    expected_probes: int,
+                    backend: str = "cpu") -> CompactionPlan:
+    """Decide whether to fold the delta into the main table now.
+
+    Two triggers: **occupancy** (the delta is filling up — compact before
+    a bucket overflows and forces a delta grow), and **amortization** (the
+    modeled overlay tax of a single expected probe stream already exceeds
+    the one-off bucket-local merge cost, so compacting pays for itself
+    within one query).  The full-rebuild estimate rides along so callers
+    can report what the incremental path saved.
+    """
+    overlay = costmodel.delta_overlay_seconds(
+        expected_probes, delta_slots, bucket_width=bucket_width,
+        backend=backend)
+    merge = costmodel.merge_seconds(delta_entries, n_dict, bucket_width,
+                                    backend=backend)
+    rebuild = costmodel.rebuild_seconds(n_build + delta_entries,
+                                        bucket_width, backend=backend)
+    if delta_entries == 0:
+        compact, reason = False, "empty"
+    elif fill_frac >= MAX_DELTA_FILL:
+        compact, reason = True, "fill"
+    elif worst_bucket_frac >= MAX_DELTA_BUCKET_FILL:
+        compact, reason = True, "bucket"
+    elif overlay > merge:
+        compact, reason = True, "amortized"
+    else:
+        compact, reason = False, "defer"
+    return CompactionPlan(compact=compact, reason=reason,
+                          est_overlay_s=overlay, est_merge_s=merge,
+                          est_rebuild_s=rebuild)
 
 
 def refine_plan(plan: SchedulePlan, exact_cold: int,

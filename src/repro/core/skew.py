@@ -80,6 +80,9 @@ class SkewStats:
 def measure_skew(keys: np.ndarray) -> SkewStats:
     """Exact skew summary of a concrete probe stream (host-side)."""
     keys = np.asarray(keys)
+    if keys.size == 0:
+        return SkewStats(n=0, distinct=0, dup_factor=1.0, max_share=0.0,
+                         top_share=(0.0,) * len(TOP_SHARE_GRID))
     _, counts = np.unique(keys, return_counts=True)
     counts = np.sort(counts)[::-1]
     cum = np.cumsum(counts, dtype=np.float64)

@@ -23,9 +23,13 @@ from jax.sharding import PartitionSpec as P
 from repro.core import (Dictionary, JSPIMTable, build_dictionary, build_table,
                         encode, join as core_join, probe, probe_deduped,
                         suggest_num_buckets)
-from repro.core.hash_table import EMPTY_KEY
+from repro.core.delta import (TOMBSTONE, DeltaTable, apply_batch,
+                              delta_entries, empty_delta, merge_entries,
+                              suggest_delta_buckets)
+from repro.core.dictionary import NO_CODE, encode_np, extend_dictionary
+from repro.core.hash_table import EMPTY_KEY, table_entries
 from repro.core.lookup import (JoinResult, ProbeResult, build_hot_table,
-                               probe_hot_cold)
+                               overlay_delta, probe_hot_cold)
 from repro.core.planner import SchedulePlan
 from repro.core.skew import SkewStats, measure_skew
 from repro.kernels import probe_table, probe_table_filtered, slot_predicate
@@ -58,6 +62,9 @@ class DimIndex:
     table: JSPIMTable
     stats: BuildStats | None = dataclasses.field(
         metadata={"static": True}, default=None)
+    # streaming-ingest side-table (raw-key space; None until first ingest).
+    # Probes overlay it after the main table; compact_index folds it back.
+    delta: DeltaTable | None = None
 
 
 def _default_bucket_width() -> int:
@@ -88,7 +95,9 @@ def build_dim_index(dim_keys: jax.Array, *, bucket_width: int | None = None,
     n = int(dim_keys.shape[0])
     fact_skew = (measure_skew(np.asarray(fact_keys))
                  if fact_keys is not None else None)
-    d = build_dictionary(dim_keys, capacity=n)
+    # capacity floor 1: a zero-length dictionary has no gatherable slot,
+    # and an empty index must still encode (to all-NO_CODE) and ingest
+    d = build_dictionary(dim_keys, capacity=max(1, n))
     codes = encode(d, dim_keys)
     nb = suggest_num_buckets(n, bucket_width, load)
     retries = 0
@@ -108,6 +117,130 @@ def build_dim_index(dim_keys: jax.Array, *, bucket_width: int | None = None,
                        overflow=int(tbl.overflow), grow_retries=retries,
                        load=load, fact_skew=fact_skew)
     return DimIndex(dictionary=d, table=tbl, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Streaming ingest: delta-buffer maintenance + cost-model-driven compaction
+# ---------------------------------------------------------------------------
+
+# batch shapes and index geometry are stable across a streaming workload,
+# so the fixed-shape delta ops compile once and amortize to ~ms per batch
+# (eager dispatch of their ~30 medium ops costs 100x that)
+_apply_batch = jax.jit(apply_batch)
+_merge_entries = jax.jit(merge_entries)
+
+
+def ingest_index(index: DimIndex, keys: jax.Array | np.ndarray,
+                 payloads: jax.Array | np.ndarray | None = None, *,
+                 op: str = "upsert") -> DimIndex:
+    """Absorb a batch of ops into ``index``'s delta without rebuilding.
+
+    ``keys`` are **raw** dimension keys (new keys have no dictionary code
+    until compaction).  ``op``: "insert" / "upsert" (``payloads`` are the
+    new dimension-row indices; at the delta level both are key->payload
+    overwrites) or "delete" (tombstones; ``payloads`` ignored).  Lossless
+    like ``build_dim_index``: a delta bucket overflow doubles the delta
+    geometry and re-applies (host-side loop, eager only).
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    if op in ("insert", "upsert"):
+        if payloads is None:
+            raise ValueError(f"op={op!r} needs payloads (dim-row indices)")
+        words = jnp.asarray(payloads, jnp.int32) << 1
+    elif op == "delete":
+        words = jnp.full(keys.shape, TOMBSTONE, jnp.int32)
+    else:
+        raise ValueError(f"unknown ingest op {op!r}")
+
+    delta = index.delta
+    if delta is None:
+        n_build = (index.stats.n_build if index.stats is not None
+                   else int(index.table.num_buckets))
+        delta = empty_delta(
+            suggest_delta_buckets(n_build, index.table.bucket_width),
+            index.table.bucket_width)
+    new = _apply_batch(delta, keys, words)
+    if not isinstance(new.overflow, jax.core.Tracer):
+        retries = 0
+        while bool(new.overflow):  # grow + re-apply: ingest never drops ops
+            if retries >= 16:  # adversarial keys: fail loudly, don't spin
+                raise RuntimeError(
+                    f"delta bucket overflow persists after {retries} "
+                    f"geometry doublings ({delta.num_buckets} buckets)")
+            retries += 1
+            ok, ow, live = (np.asarray(x) for x in delta_entries(delta))
+            grown = empty_delta(delta.num_buckets * 2, delta.bucket_width,
+                                delta.hash_mode)
+            if live.any():
+                grown = _apply_batch(grown, jnp.asarray(ok[live]),
+                                     jnp.asarray(ow[live]))
+            delta, new = grown, _apply_batch(grown, keys, words)
+    return dataclasses.replace(index, delta=new)
+
+
+def compact_index(index: DimIndex, *,
+                  max_grow_retries: int = 8) -> DimIndex:
+    """Fold the delta back into the main table (host-side, eager).
+
+    The incremental path: new raw keys take fresh dictionary codes via a
+    positional merge (``extend_dictionary`` — existing codes stay valid, so
+    the table's bucket layout survives), then ``merge_entries`` applies
+    deletes/updates/inserts with bucket-local scatters.  Only when a main
+    bucket runs out of empty slots does it fall back to a full
+    ``build_table`` over the reconstructed entry multiset with doubled
+    geometry — the sole remaining full-rebuild trigger.
+    """
+    if index.delta is None:
+        return index
+    dk, dw, live = (np.asarray(x) for x in delta_entries(index.delta))
+    if not live.any():
+        return dataclasses.replace(index, delta=None)
+    # compact to the live ops up front: the merge below is O(live entries),
+    # not O(delta capacity) — the delta is mostly empty slots by design
+    dk, dw = dk[live], dw[live]
+    live = np.ones(dk.shape, bool)
+    is_tomb = dw == int(TOMBSTONE)
+    codes0 = encode_np(index.dictionary, dk)
+    fresh = live & (codes0 == int(NO_CODE)) & ~is_tomb
+    d2, _ = extend_dictionary(index.dictionary, np.sort(dk[fresh]))
+    codes = encode_np(d2, dk)
+
+    table, grow_retries = index.table, 0
+    merged, needs_grow = _merge_entries(table, jnp.asarray(codes),
+                                        jnp.asarray(dw), jnp.asarray(live))
+    if bool(needs_grow):
+        # geometry growth: rebuild from the reconstructed live multiset
+        # with the delta's net ops applied (delta-touched codes override)
+        ek, ev, valid = (np.asarray(x) for x in table_entries(table))
+        ek, ev = ek[valid], ev[valid]
+        touched = codes[live & (codes >= 0)]
+        keep = ~np.isin(ek, touched)
+        add = live & ~is_tomb & (codes >= 0)
+        all_codes = np.concatenate([ek[keep], codes[add]])
+        all_vals = np.concatenate([ev[keep], dw[add] >> 1])
+        nb = table.num_buckets
+        while True:
+            nb *= 2
+            grow_retries += 1
+            merged = build_table(jnp.asarray(all_codes),
+                                 jnp.asarray(all_vals), num_buckets=nb,
+                                 bucket_width=table.bucket_width,
+                                 hash_mode=table.hash_mode)
+            if int(merged.overflow) == 0 or grow_retries >= max_grow_retries:
+                break
+        if int(merged.overflow) > 0:  # lossy table: fail loudly (contract:
+            raise RuntimeError(       # compaction never drops entries)
+                f"rebuild still overflows after {grow_retries} doublings "
+                f"({nb} buckets x {table.bucket_width})")
+
+    stats = index.stats
+    if stats is not None:
+        stats = dataclasses.replace(
+            stats, num_buckets=merged.num_buckets,
+            n_unique=int(merged.n_unique), n_build=int(merged.n_build),
+            overflow=int(merged.overflow),
+            grow_retries=stats.grow_retries + grow_retries)
+    return DimIndex(dictionary=d2, table=merged, stats=stats, delta=None)
 
 
 def lookup(index: DimIndex, fact_keys: jax.Array, *, impl: str = "xla",
@@ -137,18 +270,26 @@ def lookup(index: DimIndex, fact_keys: jax.Array, *, impl: str = "xla",
         if plan is None or hot_codes is None:
             raise ValueError("hot_cold needs a plan and hot_codes")
         hot = build_hot_table(index.table, hot_codes, plan.hot_slots)
-        return probe_hot_cold(index.table, codes, hot,
-                              cold_capacity=plan.cold_capacity,
-                              dedup_cold=plan.dedup_cold)
-    if schedule == "stream":
-        return probe_table(index.table, codes, schedule="stream")
-    if schedule == "deduped":
-        return probe_deduped(index.table, codes)
-    if schedule != "gathered":
+        pr = probe_hot_cold(index.table, codes, hot,
+                            cold_capacity=plan.cold_capacity,
+                            dedup_cold=plan.dedup_cold)
+    elif schedule == "stream":
+        pr = probe_table(index.table, codes, schedule="stream")
+    elif schedule == "deduped":
+        pr = probe_deduped(index.table, codes)
+    elif schedule != "gathered":
         raise ValueError(f"unknown schedule {schedule!r}")
-    if impl == "pallas":
-        return probe_table(index.table, codes)
-    return probe(index.table, codes)
+    elif impl == "pallas":
+        pr = probe_table(index.table, codes)
+    else:
+        pr = probe(index.table, codes)
+    # delta-aware flavor of every schedule: overlay buffered ingest ops.
+    # The delta lives in raw-key space — keys ingested since the last
+    # compaction have no dictionary code yet, so the overlay probes with
+    # the raw fact keys, not the codes.
+    if index.delta is not None:
+        pr = overlay_delta(pr, index.delta, fact_keys)
+    return pr
 
 
 def lookup_filtered(index: DimIndex, fact_keys: jax.Array,
@@ -165,13 +306,22 @@ def lookup_filtered(index: DimIndex, fact_keys: jax.Array,
     its per-probe DMA schedule and applies the predicate afterwards.
     """
     codes = encode(index.dictionary, fact_keys)
+    kernel_filtered = False
     if impl == "pallas":
         pred = slot_predicate(index.table, dim_mask)
-        return probe_table_filtered(index.table, codes, pred)
-    if impl == "pallas_stream":
+        pr = probe_table_filtered(index.table, codes, pred)
+        kernel_filtered = True
+    elif impl == "pallas_stream":
         pr = probe_table(index.table, codes, schedule="stream")
     else:
         pr = probe(index.table, codes)
+    if index.delta is not None:
+        # delta rows bypassed any in-kernel predicate; re-apply the row
+        # filter after the overlay (idempotent for kernel-filtered hits)
+        pr = overlay_delta(pr, index.delta, fact_keys)
+        kernel_filtered = False
+    if kernel_filtered:
+        return pr
     n = dim_mask.shape[0]
     row_ok = dim_mask[jnp.clip(pr.payload, 0, n - 1)] & (pr.payload >= 0) \
         & (pr.payload < n)
@@ -214,10 +364,17 @@ def sharded_lookup(index: DimIndex, fact_keys: jax.Array,
         codes = encode(idx.dictionary, keys)
         if hot_cold:
             ht = build_hot_table(idx.table, hot, plan.hot_slots)
-            return probe_hot_cold(idx.table, codes, ht,
-                                  cold_capacity=cold_cap,
-                                  dedup_cold=plan.dedup_cold)
-        return probe(idx.table, codes)
+            pr = probe_hot_cold(idx.table, codes, ht,
+                                cold_capacity=cold_cap,
+                                dedup_cold=plan.dedup_cold)
+        else:
+            pr = probe(idx.table, codes)
+        if idx.delta is not None:
+            # the delta travels replicated inside the index (P()) exactly
+            # like the hot table: every device overlays the same buffered
+            # ops on its shard's raw keys
+            pr = overlay_delta(pr, idx.delta, keys)
+        return pr
 
     fn = compat.shard_map(probe_shard, mesh=mesh,
                           in_specs=(P(), P(), P(axis)), out_specs=P(axis))

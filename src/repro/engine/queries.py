@@ -29,6 +29,13 @@ Execution pipeline (DESIGN.md §4):
     schedule per dimension (gathered / stream / deduped / hot_cold) from
     the cost model; both ``probe_dim`` and the cache-cold fused programs
     execute the planned schedule.  ``schedule=`` forces one everywhere.
+  * **Streaming ingest** (DESIGN.md §7) — ``append_rows`` / ``ingest``
+    absorb dimension inserts/deletes/upserts into a per-dimension delta
+    buffer (``core/delta.py``) instead of rebuilding; every probe path
+    overlays the delta, the affected dimension's cached probes drop, and
+    ``core.planner.plan_compaction`` prices the overlay tax against a
+    bucket-local merge to decide when the delta folds back into the main
+    table.
   * **run_all** — the batched entry point: probes each dimension at most
     once and executes all 13 compiled programs against the shared cache.
 """
@@ -43,13 +50,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hash_table as _ht
+from repro.core.delta import delta_stats
 from repro.core.dictionary import encode
 from repro.core.lookup import build_hot_table, hot_hit_count
-from repro.core.planner import SchedulePlan, plan_probe, refine_plan
+from repro.core.planner import (CompactionPlan, SchedulePlan,
+                                plan_compaction, plan_probe, refine_plan)
 from repro.core.skew import top_keys
 from repro.engine import baselines
-from repro.engine.join import (DimIndex, build_dim_index, lookup,
-                               lookup_filtered)
+from repro.engine.join import (DimIndex, build_dim_index, compact_index,
+                               ingest_index, lookup, lookup_filtered)
 from repro.engine.table import Table
 
 FACT_FK = {"customer": "custkey", "supplier": "suppkey",
@@ -247,6 +256,8 @@ class SSBEngine:
         self._hits = 0
         self._misses = 0
         self._invalidations = 0
+        self._ingest_batches = 0
+        self._compactions = 0
         # compiled per-query programs, keyed by query name
         self._cached_programs: dict[str, Callable] = {}
         self._full_programs: dict[str, Callable] = {}
@@ -264,7 +275,10 @@ class SSBEngine:
         plan = plan_probe(st.fact_skew, bucket_width=st.bucket_width,
                           backend=jax.default_backend(),
                           impl=self.probe_impl, code_space=st.n_unique,
-                          hash_mode=idx.table.hash_mode, force=force)
+                          hash_mode=idx.table.hash_mode,
+                          delta_slots=(0 if idx.delta is None
+                                       else idx.delta.num_slots),
+                          force=force)
         if plan.schedule == "hot_cold":
             fk = self.tables["lineorder"][FACT_FK[dim]]
             if plan.full_map:
@@ -364,6 +378,98 @@ class SSBEngine:
         """Table Update: burst-write whole buckets of ``dim``."""
         self._replace_table(dim, _ht.table_update(
             self.indexes[dim].table, bucket_ids, new_keys, new_values))
+
+    # -- streaming ingest: delta buffer + cost-model-driven compaction -----
+    def ingest(self, dim: str, keys, payloads=None, *, op: str = "upsert",
+               auto_compact: bool = True) -> CompactionPlan:
+        """Absorb a batch of index ops into ``dim``'s delta buffer.
+
+        ``keys`` are raw dimension keys; ``op`` is "insert" / "upsert"
+        (``payloads`` = dimension-row indices) or "delete" (tombstones).
+        Invalidates the dimension's cached probes, then consults the
+        planner: when the modeled delta-overlay tax or occupancy says so
+        (and ``auto_compact``), the delta folds into the main table.
+        Returns the compaction decision either way.
+        """
+        if self.mode != "jspim":
+            raise ValueError("ingest requires jspim mode (no index to "
+                             f"maintain in mode={self.mode!r})")
+        before = self.indexes[dim].delta
+        self.indexes[dim] = ingest_index(self.indexes[dim], keys, payloads,
+                                         op=op)
+        self._ingest_batches += 1
+        self.invalidate_probe_cache(dim)
+        after = self.indexes[dim].delta
+        if before is None or before.num_slots != after.num_slots:
+            # the delta appeared (or grew): re-plan so the schedule
+            # estimates price the live overlay occupancy.  The overlay tax
+            # is schedule-independent (added uniformly by the cost model),
+            # so the *decision* cannot change — compiled full programs
+            # that closed over the old plan stay behaviorally identical
+            # and are deliberately kept.
+            self._plan_dim(dim)
+        plan = self.compaction_plan(dim)
+        if auto_compact and plan.compact:
+            self.compact(dim)
+        return plan
+
+    def append_rows(self, dim: str, rows) -> None:
+        """Append new rows to a dimension table and index them.
+
+        ``rows`` maps every column of ``dim`` to a 1-D array of new
+        values.  The dimension table grows in place; in jspim mode the new
+        PK -> row-index mappings stream into the delta buffer (no index
+        rebuild), and in every mode the dimension's cached probes drop.
+        """
+        t = self.tables[dim]
+        missing = set(t.names()) ^ set(rows)
+        if missing:
+            raise ValueError(f"append_rows({dim!r}) column mismatch: "
+                             f"{sorted(missing)}")
+        new_cols = {k: jnp.asarray(rows[k], jnp.int32) for k in t.names()}
+        n_new = next(iter(new_cols.values())).shape[0]
+        n0 = t.n_rows
+        self.tables[dim] = t.append(new_cols)
+        if self.mode == "jspim":
+            self.ingest(dim, new_cols[DIM_PK[dim]],
+                        np.arange(n0, n0 + n_new, dtype=np.int32),
+                        op="insert")
+        else:
+            self.invalidate_probe_cache(dim)
+
+    def compaction_plan(self, dim: str) -> CompactionPlan:
+        """The planner's compact-or-defer decision for ``dim`` right now."""
+        idx = self.indexes[dim]
+        st = idx.stats
+        ds = delta_stats(idx.delta) if idx.delta is not None else None
+        return plan_compaction(
+            delta_entries=0 if ds is None else ds.n_entries,
+            delta_slots=0 if ds is None else ds.num_slots,
+            fill_frac=0.0 if ds is None else ds.fill_frac,
+            worst_bucket_frac=0.0 if ds is None else ds.worst_bucket_frac,
+            n_build=(st.n_build if st is not None
+                     else int(idx.table.n_build)),
+            n_dict=int(idx.dictionary.n),
+            bucket_width=idx.table.bucket_width,
+            expected_probes=self.tables["lineorder"].n_rows,
+            backend=jax.default_backend())
+
+    def compact(self, dim: str) -> None:
+        """Fold ``dim``'s delta into its main table and re-plan probes."""
+        self.indexes[dim] = compact_index(self.indexes[dim])
+        self._compactions += 1
+        self.invalidate_probe_cache(dim)
+        # the code space / geometry changed: re-plan, and drop compiled
+        # full programs (they close over the old plans statically)
+        self._plan_dim(dim)
+        self._full_programs.clear()
+
+    def ingest_info(self) -> dict:
+        """Ingest/compaction counters + per-dim delta occupancy."""
+        deltas = {d: dataclasses.asdict(delta_stats(ix.delta))
+                  for d, ix in self.indexes.items() if ix.delta is not None}
+        return {"ingest_batches": self._ingest_batches,
+                "compactions": self._compactions, "deltas": deltas}
 
     # -- compiled query programs ------------------------------------------
     def _cached_program(self, name: str) -> Callable:

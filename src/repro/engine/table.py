@@ -29,6 +29,16 @@ class Table:
     def names(self):
         return list(self.columns.keys())
 
+    def append(self, cols: Mapping[str, jax.Array]) -> "Table":
+        """A new Table with ``cols`` rows appended (streaming ingest);
+        ``cols`` must cover exactly this table's columns, equal lengths."""
+        assert set(cols) == set(self.columns), "column mismatch"
+        new = {k: jnp.asarray(v, jnp.int32) for k, v in cols.items()}
+        lens = {k: v.shape[0] for k, v in new.items()}
+        assert len(set(lens.values())) == 1, f"ragged append: {lens}"
+        return Table({k: jnp.concatenate([v, new[k]])
+                      for k, v in self.columns.items()})
+
     def gather(self, rows: jax.Array) -> "Table":
         """Row subset (rows may contain -1 = null -> clamped, caller masks)."""
         idx = jnp.clip(rows, 0, self.n_rows - 1)

@@ -33,6 +33,16 @@ settings.register_profile(
 settings.load_profile("ci")
 
 
+def pytest_configure(config):
+    # CI shards tier-1 into parallel jobs: `-m "not slow"` (fast) and
+    # `-m slow` (heavy Zipf / sharded-subprocess / property suites).
+    # A bare `pytest -x -q` still runs everything (the tier-1 contract).
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy Zipf/sharded/property suites (CI runs them in a "
+        "separate parallel shard)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     import numpy as np

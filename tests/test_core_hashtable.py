@@ -32,6 +32,7 @@ def test_dictionary_roundtrip():
     assert int(encode(d, jnp.asarray([5], jnp.int32))[0]) == -1
 
 
+@pytest.mark.slow
 @given(keys_strategy)
 def test_dictionary_property(keys):
     raw = np.asarray(keys, np.int32)
@@ -44,6 +45,7 @@ def test_dictionary_property(keys):
     assert len(np.unique(codes)) == len(uniq)
 
 
+@pytest.mark.slow
 @given(st.lists(st.integers(0, 100), min_size=1, max_size=150),
        st.lists(st.integers(0, 150), min_size=1, max_size=150))
 def test_probe_and_join_match_oracle(dim_keys, fact_keys):
@@ -76,6 +78,7 @@ def test_probe_and_join_match_oracle(dim_keys, fact_keys):
     assert int(jr.n_matches) == len(expected)
 
 
+@pytest.mark.slow
 def test_probe_deduped_equals_probe(rng):
     dim = rng.choice(300, 120, replace=False).astype(np.int32)
     fact = rng.choice(400, 500).astype(np.int32)
@@ -124,3 +127,53 @@ def test_bucket_overflow_reported():
     keys = jnp.arange(64, dtype=jnp.int32) * 4  # identity hash, bucket 0 mod 4
     t = build_table(keys, jnp.arange(64), num_buckets=4, bucket_width=8)
     assert int(t.overflow) > 0
+
+
+# ---------------------------------------------------------------------------
+# degenerate geometries (regression: n=0 crashed, PR 3)
+# ---------------------------------------------------------------------------
+
+
+def test_build_table_empty_dimension():
+    t = build_table(jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+                    num_buckets=4, bucket_width=8)
+    assert int(t.n_unique) == 0 and int(t.overflow) == 0
+    pr = probe(t, jnp.asarray([0, 5, int(EMPTY_KEY)], jnp.int32))
+    assert not np.asarray(pr.found).any()
+    jr = join(t, jnp.asarray([1, 2, 3], jnp.int32), capacity=8)
+    assert int(jr.n_matches) == 0
+    assert np.all(np.asarray(select_distinct(t, capacity=4)) == int(EMPTY_KEY))
+
+
+def test_build_table_single_row():
+    t = build_table(jnp.asarray([5], jnp.int32), jnp.asarray([0], jnp.int32),
+                    num_buckets=1, bucket_width=8)
+    assert int(t.n_unique) == 1 and int(t.overflow) == 0
+    pr = probe(t, jnp.asarray([5, 6], jnp.int32))
+    assert np.asarray(pr.found).tolist() == [True, False]
+    assert int(pr.payload[0]) == 0
+    jr = select_where_eq(t, 5, capacity=4)
+    assert int(jr.n_matches) == 1 and int(jr.right[0]) == 0
+
+
+def test_build_dim_index_empty_and_single_row():
+    from repro.engine import build_dim_index, lookup
+
+    ix0 = build_dim_index(jnp.zeros((0,), jnp.int32))
+    assert ix0.stats.n_unique == 0
+    pr = lookup(ix0, jnp.asarray([3, 9], jnp.int32))
+    assert not np.asarray(pr.found).any()
+
+    ix1 = build_dim_index(jnp.asarray([42], jnp.int32),
+                          fact_keys=np.full(10, 42, np.int32))
+    assert ix1.stats.n_unique == 1
+    pr = lookup(ix1, jnp.asarray([42, 41], jnp.int32))
+    assert np.asarray(pr.found).tolist() == [True, False]
+    assert int(pr.payload[0]) == 0
+
+
+def test_measure_skew_empty_stream():
+    from repro.core import measure_skew
+
+    s = measure_skew(np.zeros((0,), np.int32))
+    assert s.n == 0 and s.distinct == 0 and s.max_share == 0.0

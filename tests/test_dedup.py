@@ -1,5 +1,6 @@
 """Coalescing-window / dedup properties (hypothesis)."""
 import numpy as np
+import pytest
 import jax.numpy as jnp
 from hypothesis import given, strategies as st
 
@@ -9,6 +10,7 @@ from repro.core.dedup import windowed_coalesce_mask
 from repro.core.skew import zipf_sample
 
 
+@pytest.mark.slow
 @given(st.lists(st.integers(-50, 50), min_size=1, max_size=300))
 def test_coalesce_inverse_reconstructs(keys):
     k = np.asarray(keys, np.int32)
@@ -19,6 +21,7 @@ def test_coalesce_inverse_reconstructs(keys):
     assert not bool(co.overflow)
 
 
+@pytest.mark.slow
 @given(st.lists(st.integers(0, 20), min_size=1, max_size=200))
 def test_scatter_back_roundtrip(keys):
     k = np.asarray(keys, np.int32)

@@ -53,6 +53,7 @@ def test_pallas_probe_impl_agrees(tables):
     assert np.array_equal(np.asarray(a.payload)[f], np.asarray(b.payload)[f])
 
 
+@pytest.mark.slow
 def test_skewed_self_join_matches_oracle():
     """Fig 9 workload: join on a column with heavy duplication."""
     col = zipf_sample(50, 400, s=1.5, seed=1)

@@ -62,6 +62,7 @@ def test_probe_table_vs_ref(schedule, hash_mode):
                                   np.asarray(want.payload)[f])
 
 
+@pytest.mark.slow
 @given(st.lists(st.integers(0, 1000), min_size=1, max_size=64))
 @settings(max_examples=15)
 def test_kernel_property_random_probes(probes):

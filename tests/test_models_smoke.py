@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # heavy: subprocess devices / per-arch model steps
+
 from repro.configs import get_config, list_archs, smoke
 from repro.models import (decode_step, forward, init_caches, init_params,
                           loss_fn, prefill)

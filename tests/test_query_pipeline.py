@@ -151,6 +151,7 @@ def test_engine_plans_are_deterministic(tables):
     assert a == b
 
 
+@pytest.mark.slow
 def test_hot_cold_engine_bit_identical_on_all_queries(tables):
     rh = SSBEngine(tables, mode="jspim", schedule="hot_cold").run_all()
     rg = SSBEngine(tables, mode="jspim", schedule="gathered").run_all()

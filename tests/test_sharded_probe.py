@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess + 4 simulated devices
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -78,6 +80,29 @@ for dim_name, pk, fk_col, force_full in (("part", "partkey", "partkey", True),
         np.array_equal(f, np.asarray(got.found))
         and np.array_equal(np.asarray(ref.payload)[f],
                            np.asarray(got.payload)[f]))
+# delta overlay: the delta rides replicated inside the index (like the hot
+# table) while fact rows stay sharded
+from repro.engine import ingest_index
+
+idx = build_dim_index(tables["part"]["partkey"])
+n_part = int(tables["part"].n_rows)
+new_keys = jnp.arange(10**6, 10**6 + 500, dtype=jnp.int32)
+idx = ingest_index(idx, new_keys,
+                   jnp.arange(n_part, n_part + 500, dtype=jnp.int32),
+                   op="insert")
+idx = ingest_index(idx, tables["part"]["partkey"][:100], op="delete")
+fk = jnp.concatenate([tables["lineorder"]["partkey"][:8_001], new_keys])
+ref = lookup(idx, fk)
+got = sharded_lookup(idx, fk, mesh)
+f = np.asarray(ref.found)
+out["delta_overlay"] = bool(
+    np.array_equal(f, np.asarray(got.found))
+    and np.array_equal(np.asarray(ref.payload)[f],
+                       np.asarray(got.payload)[f])
+    and np.asarray(got.found)[-500:].all()        # inserted keys resolve
+    and not np.asarray(got.found)[:8_001][np.isin(
+        np.asarray(fk[:8_001]),
+        np.asarray(tables["part"]["partkey"][:100]))].any())  # tombstoned
 print("RESULT::" + json.dumps(out))
 """
 
@@ -110,3 +135,8 @@ def test_sharded_probe_output_stays_sharded(result):
 def test_sharded_hot_cold_matches_single_device(result, key):
     """Replicated hot table + sharded cold rows == unsharded probe."""
     assert result[key]
+
+
+def test_sharded_delta_overlay_matches_single_device(result):
+    """Replicated delta buffer + sharded fact rows == unsharded probe."""
+    assert result["delta_overlay"]
