@@ -26,9 +26,12 @@ from repro.core.lookup import (HotTable, JoinResult, ProbeResult,
                                overlay_delta, pack_words, probe,
                                probe_deduped, probe_hot_cold,
                                probe_with_delta, select_distinct,
-                               select_where_eq, unpack_words)
-from repro.core.planner import (CompactionPlan, SchedulePlan,
-                                plan_compaction, plan_probe, refine_plan)
+                               select_where_eq, splice_probe,
+                               unpack_words)
+from repro.core.planner import (CompactionPlan, FactAppendPlan,
+                                SchedulePlan, plan_compaction,
+                                plan_fact_append, plan_probe,
+                                refine_plan, skew_drift)
 from repro.core.skew import SkewStats, measure_skew, top_keys
 
 __all__ = [
@@ -42,9 +45,12 @@ __all__ = [
     "JSPIMTable", "build_table", "entry_update", "hash_bucket",
     "index_update", "suggest_num_buckets", "table_entries", "table_update",
     "JoinResult", "ProbeResult", "HotTable", "build_hot_table",
-    "hot_hit_count", "overlay_delta", "pack_words", "probe_hot_cold",
+    "hot_hit_count", "splice_probe",
+    "overlay_delta", "pack_words", "probe_hot_cold",
     "probe_with_delta", "unpack_words", "join", "probe",
     "probe_deduped", "select_distinct", "select_where_eq",
-    "CompactionPlan", "SchedulePlan", "plan_compaction", "plan_probe",
-    "refine_plan", "SkewStats", "measure_skew", "top_keys",
+    "CompactionPlan", "FactAppendPlan", "SchedulePlan",
+    "plan_compaction", "plan_fact_append", "plan_probe",
+    "refine_plan", "skew_drift", "SkewStats", "measure_skew",
+    "top_keys",
 ]

@@ -362,6 +362,33 @@ def probe_schedule_seconds(schedule: str, *, n_probes: int, distinct: int,
     return (ns + _SCHEDULE_OPS[schedule] * c.op_ns) * 1e-9
 
 
+def tail_extend_seconds(schedule: str, *, n_tail: int, n_cached: int,
+                        distinct: int, bucket_width: int,
+                        cold_capacity: int = 0, hot_slots: int = 0,
+                        delta_slots: int = 0,
+                        backend: str = "cpu") -> float:
+    """Modeled cost of extending a cached probe over an appended fact tail.
+
+    One tail-only probe (``n_tail`` = the pow2-padded batch, under the
+    dimension's planned schedule) plus an in-place dynamic-slice splice
+    into the cached ``(found, dim_row)`` arrays.  The splice donates the
+    cached buffers, so its steady-state cost is the tail window write —
+    the O(``n_cached``) copy survives only as a small residual term for
+    the first (non-donating) extension after a cold probe.  Compare
+    against ``probe_schedule_seconds`` of the full grown stream to price
+    tail-extension vs invalidate-and-reprobe (``planner.plan_fact_append``).
+    """
+    c = HOST_COSTS.get(backend, HOST_COSTS["cpu"])
+    probe_s = probe_schedule_seconds(
+        schedule, n_probes=n_tail, distinct=min(distinct, n_tail),
+        bucket_width=bucket_width, cold_capacity=min(cold_capacity, n_tail),
+        hot_slots=hot_slots, delta_slots=delta_slots, backend=backend)
+    splice_ns = (2 * 5 * n_tail * c.cached_gather_ns_per_byte
+                 + 0.1 * 2 * 5 * n_cached * c.cached_gather_ns_per_byte
+                 + 2 * c.op_ns)
+    return probe_s + splice_ns * 1e-9
+
+
 # --------------------------------------------------------------------------
 # Ingest pricing: delta-overlay occupancy, bucket-local merge, full rebuild
 # (planner input, core/planner.py:plan_compaction)

@@ -251,6 +251,28 @@ def probe_with_delta(table: JSPIMTable, delta: DeltaTable,
     return overlay_delta(pr, delta, dk)
 
 
+# ---------------------------------------------------------------------------
+# Tail extension: splice a tail-only probe into cached full-stream results
+# ---------------------------------------------------------------------------
+
+
+def splice_probe(head, tail, start: jax.Array) -> tuple:
+    """Write (padded) tail probe windows into cached streams at ``start``.
+
+    The fact-side streaming append primitive: ``head`` and ``tail`` are
+    matching tuples of per-probe arrays — ``ProbeResult`` fields, or the
+    engine's cached ``(found, dim_row)`` pair — where ``head`` covers the
+    capacity-padded fact column and ``tail`` just the padded append
+    batch.  ``start`` is a traced scalar, so the spliced program compiles
+    once per (capacity, batch) shape pair and steady-state appends reuse
+    it.  Padding lanes of the tail batch probe as misses (their key is
+    ``EMPTY_KEY``), which is exactly the value the capacity padding rows
+    they land on must hold.
+    """
+    return tuple(jax.lax.dynamic_update_slice(h, t, (start,))
+                 for h, t in zip(head, tail))
+
+
 class JoinResult(NamedTuple):
     """Fixed-capacity (left_row, right_row) match pairs."""
     left: jax.Array    # (capacity,) int32, -1 padded

@@ -43,6 +43,16 @@ MIN_ADAPTIVE_PROBES = 100_000
 # planner's collision-blind coverage estimate; the engine tightens it to
 # the exact count, and probe_hot_cold falls back on overflow regardless).
 COLD_SLACK = 1.3
+# Fact-side skew drift (ROADMAP "skew drift re-planning"): re-plan a
+# dimension's probe schedule once the appended tail moves any point of the
+# measured top-share curve (or the hottest-key share) by this much.  Below
+# it the old plan's decision inputs are still honest and a re-plan could
+# only thrash compiled programs.
+TOP_SHARE_DRIFT = 0.05
+# Re-measure fact skew only after the logical fact stream has grown by
+# this fraction since the last measurement — measure_skew is an O(n log n)
+# host pass, too dear to run per append batch.
+FACT_REMEASURE_FRAC = 0.10
 # Compact once the delta holds this fraction of its slots: Fibonacci
 # hashing spreads keys uniformly, but a 2x-mean bucket is routine, so
 # compacting at half full keeps per-bucket overflow (which forces a delta
@@ -231,6 +241,67 @@ def plan_compaction(*, delta_entries: int, delta_slots: int,
     return CompactionPlan(compact=compact, reason=reason,
                           est_overlay_s=overlay, est_merge_s=merge,
                           est_rebuild_s=rebuild)
+
+
+# ---------------------------------------------------------------------------
+# Fact-side append planning: extend the probe cache, or reprobe from cold?
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FactAppendPlan:
+    """Hashable extend-or-reprobe decision for one dimension's probe cache
+    after a fact-side append."""
+
+    extend: bool
+    reason: str           # "tail" | "reprobe" | "empty"
+    est_tail_s: float     # tail probe + cache splice
+    est_reprobe_s: float  # cold re-probe of the full grown stream
+
+
+def plan_fact_append(plan: SchedulePlan, *, n_tail: int, n_cached: int,
+                     distinct: int, bucket_width: int,
+                     delta_slots: int = 0,
+                     backend: str = "cpu") -> FactAppendPlan:
+    """Price probe-cache tail extension against invalidate-and-reprobe.
+
+    ``n_tail`` is the pow2-padded append batch, ``n_cached`` the cached
+    probe stream it extends.  Extension probes only the tail and splices
+    (O(tail probe + stream copy)); reprobing pays the full schedule over
+    ``n_cached + n_tail`` rows.  The tail path wins whenever the batch is
+    small next to the stream — the steady-state streaming case — and the
+    planner only says "reprobe" when a huge append (comparable to the
+    stream itself) makes the from-cold probe genuinely cheaper.
+    """
+    if n_tail == 0:
+        return FactAppendPlan(extend=False, reason="empty",
+                              est_tail_s=0.0, est_reprobe_s=0.0)
+    geom = dict(cold_capacity=plan.cold_capacity, hot_slots=plan.hot_slots) \
+        if plan.schedule == "hot_cold" else {}
+    tail = costmodel.tail_extend_seconds(
+        plan.schedule, n_tail=n_tail, n_cached=n_cached, distinct=distinct,
+        bucket_width=bucket_width, delta_slots=delta_slots, backend=backend,
+        **geom)
+    reprobe = costmodel.probe_schedule_seconds(
+        plan.schedule, n_probes=n_cached + n_tail, distinct=distinct,
+        bucket_width=bucket_width, delta_slots=delta_slots, backend=backend,
+        **geom)
+    extend = tail < reprobe
+    return FactAppendPlan(extend=extend,
+                          reason="tail" if extend else "reprobe",
+                          est_tail_s=tail, est_reprobe_s=reprobe)
+
+
+def skew_drift(old: SkewStats, new: SkewStats) -> float:
+    """How far the fact-side top-share curve moved (re-plan trigger input).
+
+    The planner's schedule choice is a function of the coverage curve and
+    the hottest-key share, so drift is the worst absolute movement across
+    exactly those inputs — a curve that shifted by ``TOP_SHARE_DRIFT``
+    anywhere can flip the hot/cold split or the deduped win.
+    """
+    deltas = [abs(a - b) for a, b in zip(old.top_share, new.top_share)]
+    return max([abs(old.max_share - new.max_share), *deltas])
 
 
 def refine_plan(plan: SchedulePlan, exact_cold: int,

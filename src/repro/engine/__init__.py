@@ -2,11 +2,13 @@
 from repro.engine.table import Table
 from repro.engine.ssb import generate_ssb
 from repro.engine.join import (BuildStats, DimIndex, build_dim_index,
-                               compact_index, ingest_index, join_pairs,
-                               lookup, lookup_filtered, sharded_lookup)
+                               compact_index, extend_cached_probe,
+                               ingest_index, join_pairs, lookup,
+                               lookup_filtered, sharded_lookup,
+                               tail_lookup)
 from repro.engine.queries import SSB_QUERIES, SSBEngine
 
 __all__ = ["Table", "generate_ssb", "BuildStats", "DimIndex",
-           "build_dim_index", "compact_index", "ingest_index", "join_pairs",
-           "lookup", "lookup_filtered", "sharded_lookup", "SSB_QUERIES",
-           "SSBEngine"]
+           "build_dim_index", "compact_index", "extend_cached_probe",
+           "ingest_index", "join_pairs", "lookup", "lookup_filtered",
+           "sharded_lookup", "tail_lookup", "SSB_QUERIES", "SSBEngine"]

@@ -14,6 +14,7 @@ buckets until the table is lossless.  The final geometry is reported in a
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import numpy as np
 import jax
@@ -29,7 +30,7 @@ from repro.core.delta import (TOMBSTONE, DeltaTable, apply_batch,
 from repro.core.dictionary import NO_CODE, encode_np, extend_dictionary
 from repro.core.hash_table import EMPTY_KEY, table_entries
 from repro.core.lookup import (JoinResult, ProbeResult, build_hot_table,
-                               overlay_delta, probe_hot_cold)
+                               overlay_delta, probe_hot_cold, splice_probe)
 from repro.core.planner import SchedulePlan
 from repro.core.skew import SkewStats, measure_skew
 from repro.kernels import probe_table, probe_table_filtered, slot_predicate
@@ -327,6 +328,65 @@ def lookup_filtered(index: DimIndex, fact_keys: jax.Array,
         & (pr.payload < n)
     keep = jnp.where(pr.is_dup, True, row_ok)
     return ProbeResult(pr.found & keep, pr.payload, pr.is_dup)
+
+
+# ---------------------------------------------------------------------------
+# Fact-side streaming append: tail-only probes + probe-cache extension
+# ---------------------------------------------------------------------------
+
+# Jitted once per (index geometry, tail shape, plan): a streaming fact
+# workload appends pow2-padded batches (engine/table.py:tail_bucket), so
+# steady-state appends hit the jit cache instead of re-tracing — the
+# recompile-avoidance contract the padded tail geometry exists for.
+
+
+@partial(jax.jit, static_argnames=("impl", "plan"))
+def tail_lookup(index: DimIndex, tail_keys: jax.Array,
+                hot_codes: jax.Array | None = None, *, impl: str = "xla",
+                plan: SchedulePlan | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Probe only an appended fact tail under the already-planned schedule.
+
+    ``tail_keys`` is the pow2-padded append batch (padding = ``EMPTY_KEY``,
+    which probes as a guaranteed miss on every schedule and through the
+    delta overlay).  Returns the engine's cached-probe representation:
+    ``(found, dim_row)`` with ``dim_row == -1`` on misses.
+    """
+    pr = lookup(index, tail_keys, impl=impl, plan=plan, hot_codes=hot_codes)
+    return pr.found, jnp.where(pr.found, pr.payload, -1)
+
+
+def _extend_cached_probe_impl(index: DimIndex, found: jax.Array,
+                              row: jax.Array, tail_keys: jax.Array,
+                              start: jax.Array,
+                              hot_codes: jax.Array | None = None, *,
+                              impl: str = "xla",
+                              plan: SchedulePlan | None = None
+                              ) -> tuple[jax.Array, jax.Array]:
+    """Tail probe + cache splice in one compiled program.
+
+    Probes ``tail_keys`` — the append batch already padded host-side to
+    its pow2 bucket shape with ``EMPTY_KEY`` (``table.pad_batch``), so
+    ragged batch sizes share executables — under the planned schedule
+    (delta overlay included) and splices the window into the cached
+    ``(found, dim_row)`` arrays at ``start`` — one dispatch per dimension
+    per append, no re-probe of the ``start`` rows already cached.
+    ``start`` is traced, so successive appends reuse one executable.
+    """
+    tf, tr = tail_lookup.__wrapped__(index, tail_keys, hot_codes,
+                                     impl=impl, plan=plan)
+    return splice_probe((found, row), (tf, tr), start)
+
+
+# Copying flavor (the cached arrays may still be aliased by a caller of
+# ``probe_dim``) and the donating flavor the engine switches to once it
+# owns the arrays: donated buffers splice in place, making the cache
+# extension O(tail batch) instead of O(cached stream).
+extend_cached_probe = partial(jax.jit, static_argnames=("impl", "plan"))(
+    _extend_cached_probe_impl)
+extend_cached_probe_donated = jax.jit(
+    _extend_cached_probe_impl, static_argnames=("impl", "plan"),
+    donate_argnums=(1, 2))
 
 
 def sharded_lookup(index: DimIndex, fact_keys: jax.Array,

@@ -36,6 +36,17 @@ Execution pipeline (DESIGN.md §4):
     ``core.planner.plan_compaction`` prices the overlay tax against a
     bucket-local merge to decide when the delta folds back into the main
     table.
+  * **Fact-side streaming append** (DESIGN.md §8) — ``append_fact_rows``
+    lands new lineorder rows in a pow2-bucketed capacity tail
+    (``table.append_tail``) and *extends* the probe cache instead of
+    invalidating it: only the padded tail is probed, under each
+    dimension's already-planned schedule with the delta overlay included,
+    and spliced into the cached ``(found, dim_row)`` arrays
+    (``join.extend_cached_probe`` — one dispatch per dimension).  A
+    monotone ``fact_epoch`` stamps every cache entry so consumers always
+    see a consistent snapshot; after heavy append the fact-side skew is
+    re-measured and drifted dimensions re-planned
+    (``planner.skew_drift`` — the ROADMAP skew-drift item).
   * **run_all** — the batched entry point: probes each dimension at most
     once and executes all 13 compiled programs against the shared cache.
 """
@@ -53,13 +64,17 @@ from repro.core import hash_table as _ht
 from repro.core.delta import delta_stats
 from repro.core.dictionary import encode
 from repro.core.lookup import build_hot_table, hot_hit_count
-from repro.core.planner import (CompactionPlan, SchedulePlan,
-                                plan_compaction, plan_probe, refine_plan)
-from repro.core.skew import top_keys
+from repro.core.planner import (FACT_REMEASURE_FRAC, TOP_SHARE_DRIFT,
+                                CompactionPlan, FactAppendPlan, SchedulePlan,
+                                plan_compaction, plan_fact_append,
+                                plan_probe, refine_plan, skew_drift)
+from repro.core.skew import measure_skew, top_keys
 from repro.engine import baselines
 from repro.engine.join import (DimIndex, build_dim_index, compact_index,
-                               ingest_index, lookup, lookup_filtered)
-from repro.engine.table import Table
+                               extend_cached_probe,
+                               extend_cached_probe_donated, ingest_index,
+                               lookup, lookup_filtered)
+from repro.engine.table import Table, pad_batch, tail_bucket
 
 FACT_FK = {"customer": "custkey", "supplier": "suppkey",
            "part": "partkey", "date": "orderdate"}
@@ -247,12 +262,29 @@ class SSBEngine:
         if mode == "jspim":
             # built once, reused across queries (§3.2.3 persistence); the
             # fact FK column rides along so BuildStats records its skew
+            # (sliced to the logical rows — capacity padding is not data)
+            n_fact = tables["lineorder"].n_rows
             for dim, pk in DIM_PK.items():
                 self.indexes[dim] = build_dim_index(
-                    tables[dim][pk], fact_keys=tables["lineorder"][FACT_FK[dim]])
+                    tables[dim][pk],
+                    fact_keys=np.asarray(
+                        tables["lineorder"][FACT_FK[dim]])[:n_fact])
                 self._plan_dim(dim)
-        # cross-query probe cache: dim -> (found, dim_row) over fact rows
+        # cross-query probe cache: dim -> (found, dim_row) over fact rows,
+        # each entry stamped with the fact epoch it is consistent with
         self._probe_cache: dict[str, tuple[jax.Array, jax.Array]] = {}
+        self._probe_epoch: dict[str, int] = {}
+        # dims whose cached arrays were (re)built by the extension path —
+        # nothing external can alias those, so the next tail splice may
+        # donate them and update in place (O(tail) instead of O(stream))
+        self._cache_owned: set[str] = set()
+        self._fact_epoch = 0
+        self._fact_appends = 0
+        self._fact_rows_appended = 0
+        self._tail_extensions = 0
+        self._tail_reprobes = 0
+        self._skew_replans = 0
+        self._skew_measured_rows = tables["lineorder"].n_rows
         self._hits = 0
         self._misses = 0
         self._invalidations = 0
@@ -272,9 +304,13 @@ class SSBEngine:
         if st is None or st.fact_skew is None:
             self.plans[dim] = SchedulePlan(schedule=force or "gathered")
             return
+        # the code space is the dictionary's, not n_unique: deleted keys'
+        # codes stay allocated until dictionary GC, so a full map sized by
+        # n_unique would drop live keys whose codes sit past it
         plan = plan_probe(st.fact_skew, bucket_width=st.bucket_width,
                           backend=jax.default_backend(),
-                          impl=self.probe_impl, code_space=st.n_unique,
+                          impl=self.probe_impl,
+                          code_space=int(idx.dictionary.n),
                           hash_mode=idx.table.hash_mode,
                           delta_slots=(0 if idx.delta is None
                                        else idx.delta.num_slots),
@@ -284,8 +320,14 @@ class SSBEngine:
             if plan.full_map:
                 hot = jnp.arange(plan.hot_entries, dtype=jnp.int32)
             else:
+                # rank hot keys over the logical rows only (capacity
+                # padding would rank EMPTY_KEY as a hot key); the cold
+                # capacity below stays sized to the physical stream the
+                # probes actually run over, so padding rows that fall
+                # cold can never overflow it
+                valid = np.asarray(fk)[:self.tables["lineorder"].n_rows]
                 hot = encode(idx.dictionary, jnp.asarray(
-                    top_keys(np.asarray(fk), plan.hot_entries)))
+                    top_keys(valid, plan.hot_entries)))
                 # tighten the cold capacity to the exact measured count
                 ht = build_hot_table(idx.table, hot, plan.hot_slots)
                 codes = encode(idx.dictionary, fk)
@@ -318,16 +360,31 @@ class SSBEngine:
 
     # -- cross-query probe cache ------------------------------------------
     def probe_dim(self, dim: str) -> tuple[jax.Array, jax.Array]:
-        """Cached (found, dim_row) for one dimension (probe once, reuse)."""
+        """Cached (found, dim_row) for one dimension (probe once, reuse).
+
+        Entries are stamped with the fact epoch they were probed (or
+        tail-extended) at; a stale stamp — possible only if an append path
+        failed to extend or invalidate — reads as a miss, so consumers can
+        never mix probe snapshots across fact epochs.
+        """
         hit = self._probe_cache.get(dim)
         if hit is not None:
-            self._hits += 1
-            return hit
+            if self._probe_epoch.get(dim) == self._fact_epoch:
+                self._hits += 1
+                # the caller now aliases the arrays: the next extension
+                # must copy, not donate, so this reference stays live
+                self._cache_owned.discard(dim)
+                return hit
+            self.invalidate_probe_cache(dim)  # stale epoch: defensive drop
         self._misses += 1
         out = self._join(dim)
         # never capture tracers (engine used under an outer jit trace)
         if not isinstance(out[0], jax.core.Tracer):
             self._probe_cache[dim] = out
+            self._probe_epoch[dim] = self._fact_epoch
+            # the caller holds the same tuple: not donation-safe until
+            # the first (copying) extension rebuilds it privately
+            self._cache_owned.discard(dim)
         return out
 
     def warm_cache(self, dims=None) -> None:
@@ -340,14 +397,17 @@ class SSBEngine:
         if dim is None:
             self._invalidations += len(self._probe_cache)
             self._probe_cache.clear()
+            self._cache_owned.clear()
         elif dim in self._probe_cache:
             self._invalidations += 1
             del self._probe_cache[dim]
+            self._cache_owned.discard(dim)
 
     def cache_info(self) -> dict:
         return {"hits": self._hits, "misses": self._misses,
                 "invalidations": self._invalidations,
-                "cached_dims": sorted(self._probe_cache)}
+                "cached_dims": sorted(self._probe_cache),
+                "fact_epoch": self._fact_epoch}
 
     # -- §3.2.3 update commands (invalidate the affected dim's probes) -----
     def _replace_table(self, dim: str, table) -> None:
@@ -436,6 +496,195 @@ class SSBEngine:
                         op="insert")
         else:
             self.invalidate_probe_cache(dim)
+
+    # -- fact-side streaming append: probe-cache tail extension ------------
+    def append_fact_rows(self, rows, *, extend_cache: bool = True) -> dict:
+        """Append new lineorder rows; extend cached probes over the tail.
+
+        ``rows`` maps every lineorder column to a 1-D array of new values.
+        The fact table grows through the pow2-bucketed capacity tail
+        (``Table.append_tail`` — steady-state appends at a fixed batch
+        size change no array shapes, so every compiled program is reused),
+        with FK columns padded by ``EMPTY_KEY`` so capacity padding can
+        never join.  Each cached dimension probe is then *extended*, not
+        invalidated: ``plan_fact_append`` prices a tail-only probe (under
+        the planned schedule, delta overlay included) + splice against a
+        cold re-probe of the grown stream and almost always extends; a
+        dimension whose extension loses (or ``extend_cache=False``, the
+        benchmark baseline) is invalidated instead.  A zero-row append is
+        a strict no-op: no epoch bump, no invalidation, no compilation.
+
+        Steady-state appends DONATE the capacity-padded buffers (table
+        columns and cached probes) so both updates happen in place —
+        O(tail batch), not O(table).  Consequences: fact column arrays
+        taken from the engine before an append are invalidated by it
+        (jax raises "Array has been deleted" on use, never silent
+        corruption); probe tuples from ``probe_dim`` survive the first
+        subsequent append (reading a cache entry relinquishes ownership,
+        so that extension copies) but not further appends without a
+        re-read — ``np.asarray`` them to keep a snapshot.  Externally
+        shared *base* tables are never donated: the first append always
+        copies into fresh capacity buffers.
+
+        Returns a report: rows appended, the new fact epoch, the per-dim
+        decision, and which dimensions were re-planned for skew drift.
+        """
+        fact = self.tables["lineorder"]
+        missing = set(fact.names()) ^ set(rows)
+        if missing:
+            raise ValueError(f"append_fact_rows column mismatch: "
+                             f"{sorted(missing)}")
+        # host-side staging: padding happens in numpy (table.pad_batch),
+        # so ragged batch sizes reach every jitted program bucket-shaped
+        new_cols = {k: np.asarray(rows[k], np.int32)
+                    for k in fact.names()}
+        lens = {k: v.shape[0] for k, v in new_cols.items()}
+        if len(set(lens.values())) != 1:
+            raise ValueError(f"ragged fact append: {lens}")
+        n_new = next(iter(lens.values()))
+        if n_new == 0:  # strict no-op: nothing moved, nothing invalidates
+            return {"appended": 0, "epoch": self._fact_epoch, "dims": {},
+                    "capacity_grew": False, "skew_replanned": []}
+        n0 = fact.n_rows
+        pad_values = {FACT_FK[d]: int(_ht.EMPTY_KEY) for d in FACT_FK}
+        # one bucket for both write windows (table tail AND cache splice)
+        bp = tail_bucket(n_new)
+        grown = fact.append_tail(new_cols, pad_values, bucket=bp)
+        capacity_grew = grown.n_physical != fact.n_physical
+        self.tables["lineorder"] = grown
+        self._fact_epoch += 1
+        self._fact_appends += 1
+        self._fact_rows_appended += int(n_new)
+        report = {"appended": int(n_new), "epoch": self._fact_epoch,
+                  "capacity_grew": capacity_grew, "dims": {}}
+        if self.mode != "jspim":  # no index: probes must rerun from cold
+            self.invalidate_probe_cache()
+            report["skew_replanned"] = []
+            return report
+        start = jnp.int32(n0)
+        for dim in sorted(self._probe_cache):
+            ap = self._fact_append_plan(dim, bp, n0)
+            if not (extend_cache and ap.extend):
+                self.invalidate_probe_cache(dim)
+                self._tail_reprobes += 1
+                report["dims"][dim] = ap.reason if extend_cache \
+                    else "invalidated"
+                continue
+            found, row = self._probe_cache[dim]
+            owned = dim in self._cache_owned
+            if found.shape[0] != grown.n_physical:  # capacity grew: re-pad
+                pad = grown.n_physical - found.shape[0]
+                found = jnp.concatenate([found, jnp.zeros((pad,), bool)])
+                row = jnp.concatenate([row, jnp.full((pad,), -1, jnp.int32)])
+                owned = True  # fresh concat buffers: donation-safe
+            fk_tail = pad_batch(new_cols[FACT_FK[dim]], bp,
+                                int(_ht.EMPTY_KEY))
+            extend = (extend_cached_probe_donated if owned
+                      else extend_cached_probe)
+            self._probe_cache[dim] = extend(
+                self.indexes[dim], found, row, fk_tail, start,
+                self._hot_codes.get(dim), impl=self.probe_impl,
+                plan=self.plans.get(dim))
+            self._probe_epoch[dim] = self._fact_epoch
+            self._cache_owned.add(dim)
+            self._tail_extensions += 1
+            report["dims"][dim] = "extended"
+        report["skew_replanned"] = self._maybe_replan_fact_skew()
+        return report
+
+    def _fact_append_plan(self, dim: str, n_tail: int,
+                          n_cached: int) -> FactAppendPlan:
+        """The planner's extend-or-reprobe decision for one cached dim."""
+        idx = self.indexes[dim]
+        st = idx.stats
+        sk = st.fact_skew if st is not None else None
+        return plan_fact_append(
+            self.plans.get(dim) or SchedulePlan(schedule="gathered"),
+            n_tail=n_tail, n_cached=n_cached,
+            distinct=(sk.distinct if sk is not None
+                      else int(idx.table.n_unique)),
+            bucket_width=idx.table.bucket_width,
+            delta_slots=0 if idx.delta is None else idx.delta.num_slots,
+            backend=jax.default_backend())
+
+    def _maybe_replan_fact_skew(self, force: bool = False) -> list[str]:
+        """Re-measure fact-side skew after heavy append; re-plan drifters.
+
+        ``BuildStats.fact_skew`` was measured at index build; a long
+        append stream can move the top-share curve until the planned
+        schedules are wrong (the ROADMAP skew-drift item).  Once the
+        logical stream has grown ``FACT_REMEASURE_FRAC`` past the last
+        measurement (or on ``force``), each dimension's FK column is
+        re-measured over the logical rows; dimensions whose curve moved
+        ``TOP_SHARE_DRIFT`` get fresh stats and a fresh plan.  Compiled
+        full programs drop only when a plan's schedule or geometry
+        actually changed (they close over plans statically); cached
+        probes stay — every schedule is bit-identical by contract.
+        """
+        if self.mode != "jspim":
+            return []
+        n_valid = self.tables["lineorder"].n_rows
+        base = max(1, self._skew_measured_rows)
+        if not force and (n_valid - base) / base < FACT_REMEASURE_FRAC:
+            return []
+        self._skew_measured_rows = n_valid
+        replanned: list[str] = []
+        for dim in DIM_PK:
+            idx = self.indexes[dim]
+            st = idx.stats
+            if st is None:
+                continue
+            fresh = measure_skew(
+                np.asarray(self.tables["lineorder"][FACT_FK[dim]])[:n_valid])
+            if (st.fact_skew is not None
+                    and skew_drift(st.fact_skew, fresh) < TOP_SHARE_DRIFT):
+                continue
+            self.indexes[dim] = dataclasses.replace(
+                idx, stats=dataclasses.replace(st, fact_skew=fresh))
+            old = self.plans.get(dim)
+            self._plan_dim(dim)
+            new = self.plans.get(dim)
+            if old is not None and (
+                    old.schedule, old.hot_entries, old.hot_slots,
+                    old.cold_capacity, old.full_map) == (
+                    new.schedule, new.hot_entries, new.hot_slots,
+                    new.cold_capacity, new.full_map):
+                # same decision, fresher estimates: keep the old plan
+                # object AND the old index metadata — both are static
+                # jit keys (DimIndex.stats included), so replacing either
+                # would retrace every probe/extension program for a
+                # re-plan that changed nothing.  The stale fact_skew
+                # baseline only means the drift trigger re-evaluates on
+                # the next re-measure, which costs a plan, not a trace.
+                self.plans[dim] = old
+                self.indexes[dim] = idx
+            else:
+                self._full_programs.clear()  # they close over plans
+            self._skew_replans += 1
+            replanned.append(dim)
+        return replanned
+
+    @property
+    def fact_epoch(self) -> int:
+        """Monotone fact-snapshot counter (bumped per non-empty append).
+
+        Every probe-cache entry carries the epoch it is consistent with,
+        so sharded probes and fused query programs built from one epoch's
+        tables never silently consume another epoch's probes — the
+        snapshot half of the MVCC serving story (ROADMAP)."""
+        return self._fact_epoch
+
+    def fact_append_info(self) -> dict:
+        """Fact-side append/extension counters + tail geometry."""
+        fact = self.tables["lineorder"]
+        return {"fact_epoch": self._fact_epoch,
+                "appends": self._fact_appends,
+                "rows_appended": self._fact_rows_appended,
+                "tail_extensions": self._tail_extensions,
+                "tail_reprobes": self._tail_reprobes,
+                "skew_replans": self._skew_replans,
+                "n_valid": fact.n_rows,
+                "n_physical": fact.n_physical}
 
     def compaction_plan(self, dim: str) -> CompactionPlan:
         """The planner's compact-or-defer decision for ``dim`` right now."""

@@ -1,26 +1,120 @@
-"""Column-store tables (§3.2.1: "JSPIM adopts a column-store approach")."""
+"""Column-store tables (§3.2.1: "JSPIM adopts a column-store approach").
+
+Two growth paths:
+
+* ``append`` — exact-shape concatenation (dimension ingest; every append
+  mints a new column length).
+* ``append_tail`` — the **fact-side** streaming path (DESIGN.md §8): rows
+  land in a pow2-bucketed tail.  Physical column capacity is quantized to
+  multiples of the padded batch shape (``tail_bucket``) and the new rows
+  are written with a dynamic-slice update, so steady-state appends keep
+  every array shape fixed — compiled probe/query programs are reused
+  instead of re-traced per batch.  Capacity padding rows carry per-column
+  fill values (FK columns: ``EMPTY_KEY``, which can never match a probe),
+  so padded rows fall out of every query through the join mask.
+  ``valid_rows`` tracks the logical row count; ``n_rows`` reports it.
+"""
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Mapping
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Smallest padded tail batch: appends below this quantize to one shape, so
+# a stream of small ragged batches still reuses a single compiled program.
+TAIL_MIN_BUCKET = 256
+# Capacity growth reserve: at least this many padded batches of headroom...
+TAIL_GROWTH_BATCHES = 4
+# ...and at least this fraction of the current physical size.  Capacity
+# shapes never repeat (they only grow), so every growth re-traces every
+# capacity-shaped program once — proportional reserve makes that an
+# amortized-O(log n) event (dynamic-array doubling, at a gentler 1.25x),
+# bounding both the recompile count and the padding-row overhead.
+TAIL_RESERVE_FRAC = 0.25
+
+
+def tail_bucket(n: int, min_bucket: int = TAIL_MIN_BUCKET) -> int:
+    """Pow2 padded shape for an ``n``-row tail batch (≥ ``min_bucket``)."""
+    return max(min_bucket, 1 << max(0, int(n) - 1).bit_length())
+
+
+def _round_up(n: int, quantum: int) -> int:
+    return -(-int(n) // int(quantum)) * int(quantum)
+
+
+def _write_tail_impl(cols, tails, start: jax.Array) -> dict:
+    """One fused tail write for every column: dynamic-slice each padded
+    batch in at ``start``.  ``start`` is traced and the batches arrive
+    already padded to the bucket shape, so every append whose batch
+    quantizes to the same bucket reuses a single executable for the
+    whole table."""
+    return {k: jax.lax.dynamic_update_slice(cols[k], tails[k], (start,))
+            for k in cols}
+
+
+# Copying flavor (first append over externally shared arrays) and the
+# steady-state donating flavor: donated capacity buffers update in place
+# (~45x cheaper than the O(capacity) copy on this CPU jaxlib), which is
+# what makes an append O(tail batch) instead of O(table).
+_write_tail_cols = jax.jit(_write_tail_impl)
+_write_tail_cols_donated = jax.jit(_write_tail_impl, donate_argnums=(0,))
+
+
+def pad_batch(values, n_pad: int, fill: int) -> jax.Array:
+    """Host-side pow2 padding of one append-batch column.
+
+    Padding in numpy costs no device dispatch and — crucially — means
+    the *device* arrays crossing the jit boundary always have the bucket
+    shape, so a stream of ragged batch sizes that quantize to the same
+    ``tail_bucket`` shares one compiled program.
+    """
+    a = np.asarray(values, np.int32)
+    assert n_pad >= a.shape[0], \
+        f"pad_batch: batch of {a.shape[0]} exceeds bucket {n_pad}"
+    if n_pad == a.shape[0]:
+        return jnp.asarray(a)
+    out = np.full((n_pad,), fill, np.int32)
+    out[:a.shape[0]] = a
+    return jnp.asarray(out)
+
 
 @dataclasses.dataclass
 class Table:
-    """An immutable integer column-store relation."""
+    """An integer column-store relation (optionally capacity-padded)."""
 
-    columns: Mapping[str, jax.Array]  # name -> (n_rows,) int32
+    columns: Mapping[str, jax.Array]  # name -> (n_physical,) int32
+    # logical row count when the physical arrays carry capacity padding
+    # (fact-side streaming tail); None means every physical row is live.
+    valid_rows: int | None = None
+    # True when ``columns`` were created by ``append_tail`` itself (growth
+    # concat or a previous tail write): such buffers cannot be aliased by
+    # code that predates the append chain, so the next tail write may
+    # DONATE them and update in place.  Consequence: column arrays taken
+    # from a post-append table are invalidated by the next append (jax
+    # raises "Array has been deleted" on use) — np.asarray to keep a copy.
+    tail_owned: bool = False
 
     def __post_init__(self):
         lens = {k: v.shape[0] for k, v in self.columns.items()}
         assert len(set(lens.values())) == 1, f"ragged columns: {lens}"
+        if self.valid_rows is not None:
+            assert 0 <= self.valid_rows <= next(iter(lens.values())), \
+                f"valid_rows {self.valid_rows} exceeds capacity {lens}"
 
     @property
     def n_rows(self) -> int:
+        """Logical rows (excludes capacity padding)."""
+        if self.valid_rows is not None:
+            return self.valid_rows
+        return next(iter(self.columns.values())).shape[0]
+
+    @property
+    def n_physical(self) -> int:
+        """Physical array length (capacity, including padding rows)."""
         return next(iter(self.columns.values())).shape[0]
 
     def __getitem__(self, name: str) -> jax.Array:
@@ -32,12 +126,70 @@ class Table:
     def append(self, cols: Mapping[str, jax.Array]) -> "Table":
         """A new Table with ``cols`` rows appended (streaming ingest);
         ``cols`` must cover exactly this table's columns, equal lengths."""
+        assert self.valid_rows is None or self.valid_rows == self.n_physical, \
+            "append on a capacity-padded table: use append_tail"
         assert set(cols) == set(self.columns), "column mismatch"
         new = {k: jnp.asarray(v, jnp.int32) for k, v in cols.items()}
         lens = {k: v.shape[0] for k, v in new.items()}
         assert len(set(lens.values())) == 1, f"ragged append: {lens}"
         return Table({k: jnp.concatenate([v, new[k]])
                       for k, v in self.columns.items()})
+
+    def append_tail(self, cols: Mapping[str, jax.Array],
+                    pad_values: Mapping[str, int] | None = None, *,
+                    min_bucket: int = TAIL_MIN_BUCKET,
+                    bucket: int | None = None) -> "Table":
+        """Streaming fact append into the pow2-bucketed tail.
+
+        ``cols`` must cover exactly this table's columns with equal
+        lengths.  The batch is padded to ``tail_bucket`` rows per column
+        (``pad_values[name]``, default 0 — join-key columns should pad
+        with ``EMPTY_KEY`` so padding can never match a probe) and written
+        at the current logical end with one fused dynamic-slice update.
+        Physical capacity grows eagerly — with a proportional reserve
+        (``TAIL_RESERVE_FRAC``) so growth is amortized-rare — only when
+        the padded write window no longer fits.  Steady-state appends at a
+        fixed batch size therefore change **no array shapes**.
+
+        ``bucket`` lets a caller that sizes companion structures to the
+        same write window (the engine's probe-cache splice) supply the
+        padded shape explicitly, so the two windows cannot drift apart.
+        """
+        assert set(cols) == set(self.columns), "column mismatch"
+        pad_values = pad_values or {}
+        lens = {k: np.asarray(v).shape[0] for k, v in cols.items()}
+        assert len(set(lens.values())) == 1, f"ragged append: {lens}"
+        b = next(iter(lens.values()))
+        n0 = self.n_rows
+        bp = tail_bucket(b, min_bucket) if bucket is None else int(bucket)
+        assert bp >= b, f"tail bucket {bp} smaller than batch {b}"
+        new = {k: pad_batch(v, bp, int(pad_values.get(k, 0)))
+               for k, v in cols.items()}
+        out = dict(self.columns)
+        grow = n0 + bp > self.n_physical
+        if grow:  # grow capacity (rare; re-traces once, copies once)
+            reserve = max(TAIL_GROWTH_BATCHES * bp,
+                          int(self.n_physical * TAIL_RESERVE_FRAC))
+            cap = _round_up(n0 + bp + reserve, bp)
+            out = {k: jnp.concatenate([
+                v, jnp.full((cap - v.shape[0],),
+                            int(pad_values.get(k, 0)), jnp.int32)])
+                for k, v in out.items()}
+        # growth concats are fresh buffers and tail_owned arrays were
+        # created by this chain — either way nothing external can alias
+        # them, so the write donates and updates in place (O(tail)).
+        # Only a manually built capacity-padded table pays a full copy.
+        writer = (_write_tail_cols_donated if grow or self.tail_owned
+                  else _write_tail_cols)
+        out = writer(out, new, jnp.int32(n0))
+        return Table(out, valid_rows=n0 + b, tail_owned=True)
+
+    def trimmed(self) -> "Table":
+        """An exact-shape copy without capacity padding (oracle rebuilds)."""
+        if self.valid_rows is None or self.valid_rows == self.n_physical:
+            return Table(dict(self.columns))
+        n = self.valid_rows
+        return Table({k: v[:n] for k, v in self.columns.items()})
 
     def gather(self, rows: jax.Array) -> "Table":
         """Row subset (rows may contain -1 = null -> clamped, caller masks)."""

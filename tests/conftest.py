@@ -47,3 +47,25 @@ def pytest_configure(config):
 def rng():
     import numpy as np
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def fact_batch():
+    """New lineorder rows resampled from a live fact table's logical rows,
+    with optional FK overrides biased into a given key pool (shared by
+    the ingest and differential fact-append suites)."""
+    import numpy as np
+
+    def make(tables, rng, n_new, start_key, fk_overrides=None, bias=0.4):
+        lo = tables["lineorder"]
+        src = rng.integers(0, lo.n_rows, n_new)
+        cols = {k: np.asarray(lo[k])[:lo.n_rows][src] for k in lo.names()}
+        cols["orderkey"] = np.arange(start_key, start_key + n_new,
+                                     dtype=np.int32)
+        for col, vals in (fk_overrides or {}).items():
+            pick = rng.random(n_new) < bias
+            cols[col] = np.where(pick, rng.choice(vals, n_new),
+                                 cols[col]).astype(np.int32)
+        return cols
+
+    return make

@@ -1,0 +1,182 @@
+"""Cross-schedule differential property suite.
+
+Every probe schedule — gathered / deduped / hot_cold / full_map — is a
+different *execution* of the same associative-search contract, and the
+delta overlay and fact-side tail extension are supposed to be invisible
+to all of them.  This suite randomizes keys, payloads, Zipf skews and
+ingest interleavings (hypothesis, or the deterministic fallback shim) and
+asserts every schedule is **bit-identical to a numpy dict oracle**:
+
+* core level: all four schedules × {no delta, live delta, compacted},
+  including the pow2-padded post-append tail probes (``tail_lookup``);
+* engine level: forced-schedule ``SSBEngine`` instances fed an identical
+  dimension-ingest + fact-append timeline must agree with each other, with
+  a baseline-mode engine, and with a rebuild-from-scratch oracle.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ProbeResult, measure_skew, plan_probe, top_keys
+from repro.core.dictionary import encode
+from repro.core.hash_table import EMPTY_KEY
+from repro.core.skew import zipf_sample
+from repro.engine import (SSBEngine, build_dim_index, compact_index,
+                          generate_ssb, ingest_index, lookup, tail_lookup)
+from repro.engine.table import tail_bucket
+
+pytestmark = pytest.mark.slow
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def _oracle(mapping: dict, stream: np.ndarray):
+    found = np.fromiter((int(k) in mapping for k in stream), bool,
+                        len(stream))
+    payload = np.fromiter((mapping.get(int(k), -1) for k in stream),
+                          np.int32, len(stream))
+    return found, payload
+
+
+def _schedule_probes(ix, stream: np.ndarray):
+    """(name, plan, hot_codes) for every probe schedule of ``ix``."""
+    sj = jnp.asarray(stream)
+    m = stream.shape[0]
+    yield "gathered", lookup(ix, sj)
+    yield "deduped", lookup(ix, sj, schedule="deduped")
+    stats = ix.stats
+    # code space == dictionary.n (codes of deleted keys stay allocated);
+    # sizing the full map by n_unique was a real bug this suite caught
+    plan = plan_probe(measure_skew(stream), bucket_width=stats.bucket_width,
+                      code_space=int(ix.dictionary.n),
+                      hash_mode=ix.table.hash_mode,
+                      delta_slots=0 if ix.delta is None
+                      else ix.delta.num_slots, force="hot_cold")
+    if plan.full_map:  # dimension fits the slot budget at these sizes
+        hot = jnp.arange(plan.hot_entries, dtype=jnp.int32)
+        yield "full_map", lookup(ix, sj, plan=plan, hot_codes=hot)
+    # partial hot/cold split, hot set ranked from the concrete stream
+    part = dataclasses.replace(plan, full_map=False, hot_entries=64,
+                               hot_slots=128,
+                               cold_capacity=_next_pow2(m))
+    hot = encode(ix.dictionary, jnp.asarray(top_keys(stream, 64)))
+    yield "hot_cold", lookup(ix, sj, plan=part, hot_codes=hot)
+    # post-append tail flavor: the same stream as a pow2-padded tail batch
+    bp = tail_bucket(m)
+    padded = np.full(bp, int(EMPTY_KEY), np.int32)
+    padded[:m] = stream
+    no_dup = jnp.zeros((m,), bool)
+    tf, tr = tail_lookup(ix, jnp.asarray(padded), hot, plan=part)
+    yield "tail_hot_cold", ProbeResult(tf[:m], tr[:m], no_dup)
+    tf, tr = tail_lookup(ix, jnp.asarray(padded))
+    assert not np.asarray(tf)[m:].any(), "tail padding lanes must miss"
+    yield "tail_gathered", ProbeResult(tf[:m], tr[:m], no_dup)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 2.0),
+       st.integers(8, 1500), st.integers(0, 2))
+@settings(max_examples=10, deadline=None)
+def test_every_schedule_matches_numpy_oracle(seed, zipf_s, n_dim,
+                                             delta_mode):
+    """gathered/deduped/hot_cold/full_map (+ padded tails) == dict oracle,
+    with delta_mode ∈ {no delta, live delta, compacted delta}."""
+    rng = np.random.default_rng(seed)
+    dim_keys = rng.choice(50_000, n_dim, replace=False).astype(np.int32)
+    ix = build_dim_index(jnp.asarray(dim_keys))
+    mapping = {int(k): i for i, k in enumerate(dim_keys)}
+
+    extra = np.zeros(0, np.int32)
+    if delta_mode > 0:  # live (1) or compacted (2) ingest interleaving
+        b = int(rng.integers(1, 300))
+        extra = np.arange(100_000, 100_000 + b, dtype=np.int32)
+        ix = ingest_index(ix, extra,
+                          np.arange(n_dim, n_dim + b, dtype=np.int32),
+                          op="insert")
+        mapping.update(zip(extra.tolist(), range(n_dim, n_dim + b)))
+        dels = rng.choice(dim_keys, min(n_dim, int(rng.integers(1, 64))),
+                          replace=False)
+        ix = ingest_index(ix, dels, op="delete")
+        for k in dels.tolist():
+            mapping.pop(int(k), None)
+        ups = rng.choice(extra, min(len(extra), 16), replace=False)
+        ix = ingest_index(ix, ups, np.full(len(ups), 7, np.int32),
+                          op="upsert")
+        mapping.update({int(k): 7 for k in ups})
+        if delta_mode == 2:
+            ix = compact_index(ix)
+            assert ix.delta is None
+        else:
+            assert ix.delta is not None
+
+    pool = np.concatenate([dim_keys, extra,
+                           np.asarray([777_777_777], np.int32)])
+    m = 4000
+    stream = pool[zipf_sample(len(pool), m, float(zipf_s), seed=seed % 997)]
+    exp_f, exp_p = _oracle(mapping, stream)
+    for name, pr in _schedule_probes(ix, stream):
+        got_f = np.asarray(pr.found)
+        assert np.array_equal(got_f, exp_f), f"{name}: found diverges"
+        assert np.array_equal(np.asarray(pr.payload)[exp_f],
+                              exp_p[exp_f]), f"{name}: payload diverges"
+
+
+def test_engine_schedules_differential_post_append(fact_batch):
+    """Forced-schedule engines fed one ingest+append timeline agree with
+    each other, with the baseline join engine, and with a from-scratch
+    rebuild — cached probes extended over the tails, delta overlay live."""
+    tables = generate_ssb(sf=0.003, seed=3)
+    rng = np.random.default_rng(42)
+    engines = {s: SSBEngine(dict(tables), mode="jspim", schedule=s)
+               for s in ("auto", "gathered", "deduped", "hot_cold")}
+    for eng in engines.values():
+        eng.warm_cache()
+
+    # dimension-side ingest: new supplier rows land in the delta
+    n_supp = tables["supplier"].n_rows
+    new_supp = np.arange(n_supp, n_supp + 40, dtype=np.int32)
+    supp_rows = {"suppkey": new_supp,
+                 "city": np.full(40, 141, np.int32),
+                 "nation": np.full(40, 14, np.int32),
+                 "region": np.full(40, 2, np.int32)}
+    for eng in engines.values():
+        eng.append_rows("supplier", supp_rows)
+        if eng.indexes["supplier"].delta is None:  # keep the overlay live
+            eng.ingest("supplier", new_supp[:1],
+                       np.asarray([n_supp], np.int32), op="upsert",
+                       auto_compact=False)
+        assert eng.indexes["supplier"].delta is not None
+
+    # fact-side appends, some rows joining the delta-resident suppliers
+    batches = [fact_batch(next(iter(engines.values())).tables, rng, 150,
+                          5_000_000 + i * 150, {"suppkey": new_supp},
+                          bias=0.3)
+               for i in range(3)]
+    for eng in engines.values():
+        for b in batches:
+            eng.append_fact_rows(b)
+        assert eng.fact_append_info()["tail_extensions"] > 0
+
+    ref = engines["auto"]
+    results = {s: eng.run_all() for s, eng in engines.items()}
+    for s, res in results.items():
+        for q in res:
+            assert int(res[q][0]) == int(results["auto"][q][0]), (s, q)
+            assert np.array_equal(np.asarray(res[q][1]),
+                                  np.asarray(results["auto"][q][1])), (s, q)
+
+    # independent oracles: rebuild-from-scratch jspim + baseline sort-merge
+    trimmed = {k: (t.trimmed() if k == "lineorder" else t)
+               for k, t in ref.tables.items()}
+    for mode in ("jspim", "baseline"):
+        oracle = SSBEngine(dict(trimmed), mode=mode)
+        res = oracle.run_all()
+        for q in res:
+            assert int(res[q][0]) == int(results["auto"][q][0]), (mode, q)
+            assert np.array_equal(np.asarray(res[q][1]),
+                                  np.asarray(results["auto"][q][1])), \
+                (mode, q)

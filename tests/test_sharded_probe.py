@@ -103,6 +103,33 @@ out["delta_overlay"] = bool(
     and not np.asarray(got.found)[:8_001][np.isin(
         np.asarray(fk[:8_001]),
         np.asarray(tables["part"]["partkey"][:100]))].any())  # tombstoned
+# fact-side streaming append: the sharded probe over the capacity-padded
+# fact column must match the plain probe AND the engine's tail-extended
+# cache; capacity padding (EMPTY_KEY) must never join on any shard
+from repro.engine import SSBEngine
+
+eng = SSBEngine(dict(tables), mode="jspim")
+eng.warm_cache()
+n0 = eng.tables["lineorder"].n_rows
+rng = np.random.default_rng(0)
+lo = tables["lineorder"]
+src = rng.integers(0, n0, 700)
+batch = {{k: np.asarray(lo[k])[src] for k in lo.names()}}
+batch["orderkey"] = np.arange(10**7, 10**7 + 700, dtype=np.int32)
+eng.append_fact_rows(batch)
+idxp = eng.indexes["part"]
+fkp = eng.tables["lineorder"]["partkey"]  # physical, capacity-padded
+ref = lookup(idxp, fkp)
+got = sharded_lookup(idxp, fkp, mesh)
+f = np.asarray(ref.found)
+cf, cr = eng._probe_cache["part"]
+out["fact_append_sharded"] = bool(
+    np.array_equal(f, np.asarray(got.found))
+    and np.array_equal(np.asarray(ref.payload)[f],
+                       np.asarray(got.payload)[f])
+    and np.array_equal(f, np.asarray(cf))
+    and np.array_equal(np.asarray(ref.payload)[f], np.asarray(cr)[f])
+    and not f[eng.tables["lineorder"].n_rows:].any())
 print("RESULT::" + json.dumps(out))
 """
 
@@ -140,3 +167,9 @@ def test_sharded_hot_cold_matches_single_device(result, key):
 def test_sharded_delta_overlay_matches_single_device(result):
     """Replicated delta buffer + sharded fact rows == unsharded probe."""
     assert result["delta_overlay"]
+
+
+def test_sharded_fact_append_matches_single_device(result):
+    """Sharded probe over the capacity-padded fact column == plain probe
+    == the engine's tail-extended probe cache (padding never joins)."""
+    assert result["fact_append_sharded"]
