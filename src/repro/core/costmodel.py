@@ -415,10 +415,18 @@ def delta_overlay_seconds(n_probes: int, delta_slots: int,
 
 
 def merge_seconds(n_delta: int, n_dict: int, bucket_width: int,
-                  backend: str = "cpu") -> float:
+                  backend: str = "cpu", *, swap: bool = False) -> float:
     """Bucket-local compaction: dictionary positional merge + two scatter
     phases over the delta entries' bucket rows.  O(n_dict + n_delta), no
-    sort over the build column."""
+    sort over the build column.
+
+    ``swap=False`` is the in-place flavor (the merge scatters donate the
+    table buffers, so only the touched bucket rows move); ``swap=True``
+    prices the double-buffered flavor a pinned epoch snapshot forces —
+    the merge must leave the old buffers intact for the snapshot's
+    readers, so both table arrays (keys + values, ~``2 x n_dict / load``
+    slots at load 0.5) are copied into the fresh pair before the swap.
+    """
     c = HOST_COSTS.get(backend, HOST_COSTS["cpu"])
     row_bytes = 2 * bucket_width * 4
     ns = (3.0 * (n_dict + n_delta) * c.pass_ns          # dictionary merge
@@ -426,6 +434,8 @@ def merge_seconds(n_delta: int, n_dict: int, bucket_width: int,
           + 2.0 * n_delta * (row_bytes * c.gather_ns_per_byte
                              + bucket_width * c.lane_ns)  # phase-1/2 rows
           + 8 * c.op_ns)
+    if swap:  # sequential copy of keys+values into the fresh buffer pair
+        ns += 2 * (2 * n_dict) * 8 * c.cached_gather_ns_per_byte
     return ns * 1e-9
 
 

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -119,6 +120,19 @@ class DeltaStats:
     @property
     def worst_bucket_frac(self) -> float:
         return self.max_bucket_fill / max(1, self.bucket_width)
+
+
+def delta_is_empty(delta: DeltaTable | None) -> bool:
+    """True when the delta buffers no live ops (compaction would be a no-op).
+
+    Host-side on purpose (numpy over the transferred ``fill`` row, no jax
+    ops): the engine's strict-no-op contract for ``compact`` on an empty
+    delta includes *compiling nothing*, so the emptiness probe itself must
+    not dispatch a device computation.
+    """
+    if delta is None:
+        return True
+    return not np.asarray(delta.fill).any()
 
 
 def delta_stats(delta: DeltaTable) -> DeltaStats:

@@ -203,15 +203,20 @@ class CompactionPlan:
     compact: bool
     reason: str          # "fill" | "bucket" | "amortized" | "defer" | "empty"
     est_overlay_s: float  # per-probe-stream delta-overlay tax right now
-    est_merge_s: float    # one bucket-local compaction
+    est_merge_s: float    # one compaction, in the flavor `swap` names
     est_rebuild_s: float  # the full sort-based rebuild being avoided
+    # snapshot-aware flavor (MVCC, DESIGN.md §9): True when a live epoch
+    # snapshot pins the table buffers, so the merge must build a fresh
+    # buffer pair and swap instead of donating the old one in place.
+    swap: bool = False
 
 
 def plan_compaction(*, delta_entries: int, delta_slots: int,
                     fill_frac: float, worst_bucket_frac: float = 0.0,
                     n_build: int, n_dict: int, bucket_width: int,
                     expected_probes: int,
-                    backend: str = "cpu") -> CompactionPlan:
+                    backend: str = "cpu",
+                    pinned: bool = False) -> CompactionPlan:
     """Decide whether to fold the delta into the main table now.
 
     Two triggers: **occupancy** (the delta is filling up — compact before
@@ -220,12 +225,19 @@ def plan_compaction(*, delta_entries: int, delta_slots: int,
     the one-off bucket-local merge cost, so compacting pays for itself
     within one query).  The full-rebuild estimate rides along so callers
     can report what the incremental path saved.
+
+    ``pinned`` is the snapshot-aware input: a live epoch snapshot pins the
+    main-table buffers, so compaction must pay the double-buffered swap
+    (copy + atomic publish) instead of the in-place donating merge —
+    dearer, which correctly defers amortization-triggered compactions
+    while readers hold old epochs.  The occupancy triggers are
+    unaffected: delta overflow is a correctness hazard, worth a swap.
     """
     overlay = costmodel.delta_overlay_seconds(
         expected_probes, delta_slots, bucket_width=bucket_width,
         backend=backend)
     merge = costmodel.merge_seconds(delta_entries, n_dict, bucket_width,
-                                    backend=backend)
+                                    backend=backend, swap=pinned)
     rebuild = costmodel.rebuild_seconds(n_build + delta_entries,
                                         bucket_width, backend=backend)
     if delta_entries == 0:
@@ -240,7 +252,7 @@ def plan_compaction(*, delta_entries: int, delta_slots: int,
         compact, reason = False, "defer"
     return CompactionPlan(compact=compact, reason=reason,
                           est_overlay_s=overlay, est_merge_s=merge,
-                          est_rebuild_s=rebuild)
+                          est_rebuild_s=rebuild, swap=pinned)
 
 
 # ---------------------------------------------------------------------------

@@ -7,8 +7,10 @@ from repro.engine.join import (BuildStats, DimIndex, build_dim_index,
                                lookup_filtered, sharded_lookup,
                                tail_lookup)
 from repro.engine.queries import SSB_QUERIES, SSBEngine
+from repro.engine.snapshot import EpochSnapshot
 
 __all__ = ["Table", "generate_ssb", "BuildStats", "DimIndex",
            "build_dim_index", "compact_index", "extend_cached_probe",
            "ingest_index", "join_pairs", "lookup", "lookup_filtered",
-           "sharded_lookup", "tail_lookup", "SSB_QUERIES", "SSBEngine"]
+           "sharded_lookup", "tail_lookup", "SSB_QUERIES", "SSBEngine",
+           "EpochSnapshot"]

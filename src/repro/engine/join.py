@@ -129,6 +129,12 @@ def build_dim_index(dim_keys: jax.Array, *, bucket_width: int | None = None,
 # (eager dispatch of their ~30 medium ops costs 100x that)
 _apply_batch = jax.jit(apply_batch)
 _merge_entries = jax.jit(merge_entries)
+# In-place compaction flavor (MVCC, DESIGN.md §9): donating the table lets
+# XLA apply the merge's bucket-local scatters to the existing buffers, so
+# an unpinned compaction is O(delta) instead of O(table copy).  Callers
+# must only pick it when nothing else aliases the table buffers — the
+# engine gates it on "no live epoch snapshot pins this index".
+_merge_entries_donated = jax.jit(merge_entries, donate_argnums=(0,))
 
 
 def ingest_index(index: DimIndex, keys: jax.Array | np.ndarray,
@@ -179,8 +185,8 @@ def ingest_index(index: DimIndex, keys: jax.Array | np.ndarray,
     return dataclasses.replace(index, delta=new)
 
 
-def compact_index(index: DimIndex, *,
-                  max_grow_retries: int = 8) -> DimIndex:
+def compact_index(index: DimIndex, *, max_grow_retries: int = 8,
+                  donate: bool = False) -> DimIndex:
     """Fold the delta back into the main table (host-side, eager).
 
     The incremental path: new raw keys take fresh dictionary codes via a
@@ -190,6 +196,15 @@ def compact_index(index: DimIndex, *,
     bucket runs out of empty slots does it fall back to a full
     ``build_table`` over the reconstructed entry multiset with doubled
     geometry — the sole remaining full-rebuild trigger.
+
+    ``donate=False`` (default) is the **swap** flavor: the merge builds a
+    fresh buffer pair and the old table survives untouched, so readers
+    holding the input index (epoch snapshots) stay valid — the caller
+    publishes the result with one atomic reference swap.  ``donate=True``
+    is the **in-place** flavor: the input table's buffers are donated to
+    the merge scatters (O(delta), not O(table copy)) and are DELETED —
+    only safe when the caller owns the index exclusively (the engine
+    gates it on "no live snapshot pins these buffers").
     """
     if index.delta is None:
         return index
@@ -207,18 +222,21 @@ def compact_index(index: DimIndex, *,
     codes = encode_np(d2, dk)
 
     table, grow_retries = index.table, 0
-    merged, needs_grow = _merge_entries(table, jnp.asarray(codes),
-                                        jnp.asarray(dw), jnp.asarray(live))
+    merge = _merge_entries_donated if donate else _merge_entries
+    merged, needs_grow = merge(table, jnp.asarray(codes),
+                               jnp.asarray(dw), jnp.asarray(live))
     if bool(needs_grow):
-        # geometry growth: rebuild from the reconstructed live multiset
-        # with the delta's net ops applied (delta-touched codes override)
-        ek, ev, valid = (np.asarray(x) for x in table_entries(table))
+        # geometry growth: rebuild from the *merged* table's live multiset.
+        # (The original table may have been donated away.)  The merge has
+        # already applied every delete/update and every insert that fit;
+        # the only ops missing from ``merged`` are the inserts whose
+        # bucket ran out of slots — exactly the live non-tombstone codes
+        # absent from the merged entries.
+        ek, ev, valid = (np.asarray(x) for x in table_entries(merged))
         ek, ev = ek[valid], ev[valid]
-        touched = codes[live & (codes >= 0)]
-        keep = ~np.isin(ek, touched)
-        add = live & ~is_tomb & (codes >= 0)
-        all_codes = np.concatenate([ek[keep], codes[add]])
-        all_vals = np.concatenate([ev[keep], dw[add] >> 1])
+        unplaced = live & ~is_tomb & (codes >= 0) & ~np.isin(codes, ek)
+        all_codes = np.concatenate([ek, codes[unplaced]])
+        all_vals = np.concatenate([ev, dw[unplaced] >> 1])
         nb = table.num_buckets
         while True:
             nb *= 2

@@ -49,10 +49,20 @@ Execution pipeline (DESIGN.md §4):
     (``planner.skew_drift`` — the ROADMAP skew-drift item).
   * **run_all** — the batched entry point: probes each dimension at most
     once and executes all 13 compiled programs against the shared cache.
+  * **MVCC epoch snapshots** (DESIGN.md §9) — ``snapshot()`` freezes one
+    consistent image (tables + indexes + deltas + plans + probe cache) as
+    an ``EpochSnapshot`` that answers queries through the same compiled
+    machinery (``_QueryRunner``) while ingest advances the engine's head
+    image and publishes each step with an atomic epoch bump.  Donation
+    (the in-place fact-table write, probe-cache splice and compaction
+    merge) is gated on buffer-generation refcounts: a generation pinned
+    by a live snapshot is never donated, so stale snapshots stay valid
+    and bit-identical until released.
 """
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from functools import partial
 from typing import Callable
 
@@ -61,7 +71,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hash_table as _ht
-from repro.core.delta import delta_stats
+from repro.core.delta import delta_is_empty, delta_stats
 from repro.core.dictionary import encode
 from repro.core.lookup import build_hot_table, hot_hit_count
 from repro.core.planner import (FACT_REMEASURE_FRAC, TOP_SHARE_DRIFT,
@@ -240,7 +250,140 @@ def _filter_aggregate(spec: QuerySpec, fact_cols, dim_cols, probes):
     return total, groups
 
 
-class SSBEngine:
+class _QueryRunner:
+    """Shared query-execution surface of the live engine and its snapshots.
+
+    Subclasses provide the state (``tables`` / ``indexes`` / ``plans`` /
+    ``_hot_codes`` / ``mode`` / ``probe_impl`` plus the two program
+    caches) and a ``probe_dim`` implementation; everything from the join
+    primitive to ``run_all`` lives here, identical between the mutable
+    ``SSBEngine`` and a frozen ``EpochSnapshot``.  That sharing is the
+    MVCC serving contract (DESIGN.md §9): a snapshot answers queries
+    through the *same compiled programs* as the head engine — same
+    shapes, same plans-as-static-keys — so serving from an old epoch
+    costs no retrace and can never diverge behaviorally from the code
+    path the head runs.
+    """
+
+    mode: str
+    probe_impl: str
+    tables: dict[str, Table]
+    indexes: dict[str, DimIndex]
+    plans: dict[str, SchedulePlan]
+    _hot_codes: dict[str, jax.Array]
+    _cached_programs: dict[str, Callable]
+    _full_programs: dict[str, Callable]
+
+    def probe_dim(self, dim: str) -> tuple[jax.Array, jax.Array]:
+        raise NotImplementedError
+
+    # -- join primitive: (found, dim_row) per fact row ---------------------
+    def _join(self, dim: str) -> tuple[jax.Array, jax.Array]:
+        fact = self.tables["lineorder"]
+        fk = fact[FACT_FK[dim]]
+        if self.mode == "jspim":
+            return _jspim_probe(self.indexes[dim], fk,
+                                self._hot_codes.get(dim),
+                                impl=self.probe_impl,
+                                plan=self.plans.get(dim))
+        dk = self.tables[dim][DIM_PK[dim]]
+        if self.mode == "baseline":
+            return _sort_merge_probe(fk, dk)
+        if self.mode == "pid":
+            return _pid_probe(fk, dk)
+        raise ValueError(self.mode)
+
+    # -- compiled query programs ------------------------------------------
+    def _cached_program(self, name: str) -> Callable:
+        """Jitted filter→mask→aggregate consuming cached probes."""
+        prog = self._cached_programs.get(name)
+        if prog is None:
+            spec = SSB_QUERIES[name]
+            prog = jax.jit(partial(_filter_aggregate, spec))
+            self._cached_programs[name] = prog
+        return prog
+
+    def _full_program(self, name: str) -> Callable:
+        """One jitted probe→filter→mask→aggregate program (cache-cold path).
+
+        In jspim mode with a Pallas impl, dimensions that carry a predicate
+        probe through the fused probe+filter kernel — compare, tag-decode,
+        and dimension-filter in a single VMEM pass.
+        """
+        prog = self._full_programs.get(name)
+        if prog is not None:
+            return prog
+        spec = SSB_QUERIES[name]
+        mode, impl = self.mode, self.probe_impl
+        plans = dict(self.plans)  # fixed per runner: safe static closure
+        fuse_filter = mode == "jspim" and impl.startswith("pallas")
+
+        def program(fact_cols, dim_cols, indexes, hots):
+            probes: dict[str, tuple[jax.Array, jax.Array]] = {}
+            for dim in spec.joined_dims():
+                fk = fact_cols[FACT_FK[dim]]
+                if mode == "jspim":
+                    if fuse_filter and dim in spec.dim_filters:
+                        dmask = spec.dim_filters[dim](Table(dim_cols[dim]))
+                        pr = lookup_filtered(indexes[dim], fk, dmask,
+                                             impl=impl)
+                    else:
+                        pr = lookup(indexes[dim], fk, impl=impl,
+                                    plan=plans.get(dim),
+                                    hot_codes=hots.get(dim))
+                    probes[dim] = (pr.found,
+                                   jnp.where(pr.found, pr.payload, -1))
+                elif mode == "baseline":
+                    probes[dim] = baselines.sort_merge_join_unique(
+                        fk, dim_cols[dim][DIM_PK[dim]])
+                else:
+                    probes[dim] = baselines.partitioned_hash_join_unique(
+                        fk, dim_cols[dim][DIM_PK[dim]])
+            return _filter_aggregate(spec, fact_cols, dim_cols, probes)
+
+        prog = jax.jit(program)
+        self._full_programs[name] = prog
+        return prog
+
+    # -- execution ---------------------------------------------------------
+    def _dim_cols(self, spec: QuerySpec) -> dict:
+        return {d: dict(self.tables[d].columns) for d in spec.joined_dims()}
+
+    def run(self, name: str, *, use_cache: bool = True
+            ) -> tuple[jax.Array, jax.Array]:
+        """Execute one query as a single compiled program.
+
+        ``use_cache=True`` (default) consumes the cross-query probe cache;
+        ``use_cache=False`` runs the fully fused probe→…→aggregate program
+        without touching the cache (cold-path benchmark flavor).
+        """
+        spec = SSB_QUERIES[name]
+        fact_cols = dict(self.tables["lineorder"].columns)
+        dim_cols = self._dim_cols(spec)
+        if use_cache:
+            probes = {d: self.probe_dim(d) for d in spec.joined_dims()}
+            return self._cached_program(name)(fact_cols, dim_cols, probes)
+        if self.mode == "jspim":
+            idx = {d: self.indexes[d] for d in spec.joined_dims()}
+            hots = {d: self._hot_codes[d] for d in spec.joined_dims()
+                    if d in self._hot_codes}
+        else:
+            idx, hots = {}, {}
+        return self._full_program(name)(fact_cols, dim_cols, idx, hots)
+
+    def run_all(self, names=None, *, use_cache: bool = True
+                ) -> dict[str, tuple[jax.Array, jax.Array]]:
+        """Batched entry point: all queries against the shared probe cache.
+
+        Probes each dimension at most once (cache-warm after the first
+        query that touches it), then executes every compiled program."""
+        out: dict[str, tuple[jax.Array, jax.Array]] = {}
+        for name in (names if names is not None else sorted(SSB_QUERIES)):
+            out[name] = self.run(name, use_cache=use_cache)
+        return out
+
+
+class SSBEngine(_QueryRunner):
     """Executes SSB queries with joins delegated to the selected engine.
 
     ``probe_impl``: "xla" | "pallas" | "pallas_stream" (jspim mode only).
@@ -278,6 +421,24 @@ class SSBEngine:
         # nothing external can alias those, so the next tail splice may
         # donate them and update in place (O(tail) instead of O(stream))
         self._cache_owned: set[str] = set()
+        # -- MVCC epoch serving (DESIGN.md §9) ----------------------------
+        # Global state epoch: bumped by every mutation that advances the
+        # head image (fact append, dim ingest/delete, §3.2.3 updates,
+        # compaction).  Lives in host state only — it must NEVER become a
+        # jit-static argument, or every epoch swap would retrace.
+        self._epoch = 0
+        # Live snapshots (weak: an unreferenced snapshot stops pinning
+        # even without an explicit release) and buffer generations.  A
+        # generation counts fresh buffer *families*: it bumps whenever the
+        # engine creates new physical buffers for that piece of state, so
+        # "snapshot pins generation g" + "current generation is still g"
+        # ⟺ donating now would delete arrays the snapshot reads.
+        self._snapshots: "weakref.WeakSet" = weakref.WeakSet()
+        self._snapshots_taken = 0
+        self._pin_copies = 0          # donations refused because of a pin
+        self._fact_gen = 0            # lineorder capacity-buffer family
+        self._cache_gens: dict[str, int] = {}   # per-dim probe-cache family
+        self._index_gens: dict[str, int] = {}   # per-dim main-table family
         self._fact_epoch = 0
         self._fact_appends = 0
         self._fact_rows_appended = 0
@@ -342,22 +503,6 @@ class SSBEngine:
         """Final index geometry per dimension (jspim mode)."""
         return {d: ix.stats for d, ix in self.indexes.items()}
 
-    # -- join primitive: (found, dim_row) per fact row ---------------------
-    def _join(self, dim: str) -> tuple[jax.Array, jax.Array]:
-        fact = self.tables["lineorder"]
-        fk = fact[FACT_FK[dim]]
-        if self.mode == "jspim":
-            return _jspim_probe(self.indexes[dim], fk,
-                                self._hot_codes.get(dim),
-                                impl=self.probe_impl,
-                                plan=self.plans.get(dim))
-        dk = self.tables[dim][DIM_PK[dim]]
-        if self.mode == "baseline":
-            return _sort_merge_probe(fk, dk)
-        if self.mode == "pid":
-            return _pid_probe(fk, dk)
-        raise ValueError(self.mode)
-
     # -- cross-query probe cache ------------------------------------------
     def probe_dim(self, dim: str) -> tuple[jax.Array, jax.Array]:
         """Cached (found, dim_row) for one dimension (probe once, reuse).
@@ -382,8 +527,11 @@ class SSBEngine:
         if not isinstance(out[0], jax.core.Tracer):
             self._probe_cache[dim] = out
             self._probe_epoch[dim] = self._fact_epoch
-            # the caller holds the same tuple: not donation-safe until
-            # the first (copying) extension rebuilds it privately
+            # fresh probe output: a new buffer generation (no snapshot
+            # can pin it yet), but the caller holds the same tuple, so
+            # it is not donation-safe until the first copying extension
+            # rebuilds it privately
+            self._cache_gens[dim] = self._cache_gens.get(dim, 0) + 1
             self._cache_owned.discard(dim)
         return out
 
@@ -409,10 +557,69 @@ class SSBEngine:
                 "cached_dims": sorted(self._probe_cache),
                 "fact_epoch": self._fact_epoch}
 
+    # -- MVCC epoch snapshots (DESIGN.md §9) -------------------------------
+    @property
+    def epoch(self) -> int:
+        """Monotone global state epoch (every mutation publishes one)."""
+        return self._epoch
+
+    def snapshot(self) -> "EpochSnapshot":
+        """Freeze the current image as a lock-free query snapshot.
+
+        The returned ``EpochSnapshot`` shares this engine's buffers
+        (zero-copy) and compiled programs; it keeps answering queries
+        bit-identically at this epoch while ``append_fact_rows`` /
+        ``ingest`` / ``compact`` advance the engine.  The engine's
+        donation fast paths (in-place fact writes, probe-cache splices,
+        in-place compaction merges) refuse to touch any buffer
+        generation a live snapshot pins — the first mutation after a
+        snapshot copies into a fresh generation instead, after which
+        donation re-arms.  Release the snapshot (``release()`` / context
+        manager / letting it be garbage collected) to retire its pins.
+        """
+        from repro.engine.snapshot import EpochSnapshot
+
+        snap = EpochSnapshot(self)
+        self._snapshots.add(snap)
+        self._snapshots_taken += 1
+        return snap
+
+    def _live_snapshots(self) -> list:
+        return [s for s in self._snapshots if not s.released]
+
+    def _fact_pinned(self) -> bool:
+        """Does a live snapshot pin the current fact capacity buffers?"""
+        return any(s._pin_fact_gen == self._fact_gen
+                   for s in self._live_snapshots())
+
+    def _cache_pinned(self, dim: str) -> bool:
+        """Does a live snapshot pin ``dim``'s current cached probe arrays?"""
+        g = self._cache_gens.get(dim, 0)
+        return any(s._pin_cache_gens.get(dim) == g
+                   for s in self._live_snapshots())
+
+    def _index_pinned(self, dim: str) -> bool:
+        """Does a live snapshot pin ``dim``'s current main-table buffers?"""
+        g = self._index_gens.get(dim, 0)
+        return any(s._pin_index_gens.get(dim) == g
+                   for s in self._live_snapshots())
+
+    def snapshot_info(self) -> dict:
+        """Epoch / snapshot / pin counters (serving observability)."""
+        return {"epoch": self._epoch,
+                "live_snapshots": len(self._live_snapshots()),
+                "snapshots_taken": self._snapshots_taken,
+                "pin_copies": self._pin_copies,
+                "fact_gen": self._fact_gen}
+
     # -- §3.2.3 update commands (invalidate the affected dim's probes) -----
     def _replace_table(self, dim: str, table) -> None:
         self.indexes[dim] = dataclasses.replace(self.indexes[dim],
                                                 table=table)
+        # the functional update minted fresh table buffers: new generation
+        # (snapshots keep the old table object), new published epoch
+        self._index_gens[dim] = self._index_gens.get(dim, 0) + 1
+        self._epoch += 1
         self.invalidate_probe_cache(dim)
 
     def entry_update(self, dim: str, bucket, slot, key, value_word) -> None:
@@ -454,10 +661,19 @@ class SSBEngine:
         if self.mode != "jspim":
             raise ValueError("ingest requires jspim mode (no index to "
                              f"maintain in mode={self.mode!r})")
+        if np.asarray(keys).shape[0] == 0:
+            # strict no-op (mirror of the empty-append fix): zero ops can
+            # change no state, so publishing an epoch, dropping probes,
+            # re-planning, or minting an empty delta would be pure loss
+            return self.compaction_plan(dim)
         before = self.indexes[dim].delta
         self.indexes[dim] = ingest_index(self.indexes[dim], keys, payloads,
                                          op=op)
         self._ingest_batches += 1
+        # delta buffers are fresh but the main table's are shared with the
+        # previous index object, so the table generation does NOT bump —
+        # a pre-ingest snapshot still pins them against donated merges
+        self._epoch += 1
         self.invalidate_probe_cache(dim)
         after = self.indexes[dim].delta
         if before is None or before.num_slots != after.num_slots:
@@ -495,6 +711,7 @@ class SSBEngine:
                         np.arange(n0, n0 + n_new, dtype=np.int32),
                         op="insert")
         else:
+            self._epoch += 1
             self.invalidate_probe_cache(dim)
 
     # -- fact-side streaming append: probe-cache tail extension ------------
@@ -549,9 +766,22 @@ class SSBEngine:
         pad_values = {FACT_FK[d]: int(_ht.EMPTY_KEY) for d in FACT_FK}
         # one bucket for both write windows (table tail AND cache splice)
         bp = tail_bucket(n_new)
+        will_grow = n0 + bp > fact.n_physical
+        if fact.tail_owned and not will_grow and self._fact_pinned():
+            # a live snapshot pins the current capacity buffers: this
+            # append must copy into a fresh generation (the snapshot's
+            # readers keep the old one, bit-identical forever); donation
+            # re-arms on the new buffers for the next append.  A growing
+            # append writes fresh concat buffers regardless, so pins
+            # change (and therefore count) nothing there.
+            fact = dataclasses.replace(fact, tail_owned=False)
+            self._pin_copies += 1
         grown = fact.append_tail(new_cols, pad_values, bucket=bp)
         capacity_grew = grown.n_physical != fact.n_physical
+        if capacity_grew or not fact.tail_owned:
+            self._fact_gen += 1  # fresh buffers: no snapshot pins them yet
         self.tables["lineorder"] = grown
+        self._epoch += 1
         self._fact_epoch += 1
         self._fact_appends += 1
         self._fact_rows_appended += int(n_new)
@@ -572,11 +802,21 @@ class SSBEngine:
                 continue
             found, row = self._probe_cache[dim]
             owned = dim in self._cache_owned
+            pinned_copy = False
+            if owned and self._cache_pinned(dim):
+                # a live snapshot pins these probe arrays: splice into a
+                # fresh copy instead of donating them out from under it
+                owned = False
+                pinned_copy = True
+            fresh = not owned  # a copying splice mints a new generation
             if found.shape[0] != grown.n_physical:  # capacity grew: re-pad
                 pad = grown.n_physical - found.shape[0]
                 found = jnp.concatenate([found, jnp.zeros((pad,), bool)])
                 row = jnp.concatenate([row, jnp.full((pad,), -1, jnp.int32)])
-                owned = True  # fresh concat buffers: donation-safe
+                owned, fresh = True, True  # fresh concats: donation-safe
+                pinned_copy = False  # the concat copied regardless of pins
+            if pinned_copy:
+                self._pin_copies += 1
             fk_tail = pad_batch(new_cols[FACT_FK[dim]], bp,
                                 int(_ht.EMPTY_KEY))
             extend = (extend_cached_probe_donated if owned
@@ -587,6 +827,8 @@ class SSBEngine:
                 plan=self.plans.get(dim))
             self._probe_epoch[dim] = self._fact_epoch
             self._cache_owned.add(dim)
+            if fresh:
+                self._cache_gens[dim] = self._cache_gens.get(dim, 0) + 1
             self._tail_extensions += 1
             report["dims"][dim] = "extended"
         report["skew_replanned"] = self._maybe_replan_fact_skew()
@@ -701,11 +943,35 @@ class SSBEngine:
             n_dict=int(idx.dictionary.n),
             bucket_width=idx.table.bucket_width,
             expected_probes=self.tables["lineorder"].n_rows,
-            backend=jax.default_backend())
+            backend=jax.default_backend(),
+            pinned=self._index_pinned(dim))
 
     def compact(self, dim: str) -> None:
-        """Fold ``dim``'s delta into its main table and re-plan probes."""
-        self.indexes[dim] = compact_index(self.indexes[dim])
+        """Fold ``dim``'s delta into its main table and re-plan probes.
+
+        With no buffered ops (no delta, or an all-empty one) this is a
+        strict no-op — no cache invalidation, no re-plan, no compiled
+        programs dropped, no epoch published, nothing compiled (the
+        mirror of the empty-append fix): there is no state a merge of
+        zero ops could change, so thrashing compiled programs for it
+        would be pure loss.
+
+        When a live snapshot pins the main-table buffers the merge runs
+        in its **swap** flavor (fresh buffer pair, old table intact for
+        the snapshot's readers, one atomic reference publish); unpinned,
+        it donates the buffers and merges in place (O(delta)).
+        """
+        idx = self.indexes[dim]
+        if delta_is_empty(idx.delta):
+            return
+        pinned = self._index_pinned(dim)
+        if pinned:
+            self._pin_copies += 1
+        self.indexes[dim] = compact_index(idx, donate=not pinned)
+        # either flavor publishes a fresh table generation: the swap built
+        # a new pair, and the donated merge's buffers were never pinned
+        self._index_gens[dim] = self._index_gens.get(dim, 0) + 1
+        self._epoch += 1
         self._compactions += 1
         self.invalidate_probe_cache(dim)
         # the code space / geometry changed: re-plan, and drop compiled
@@ -719,84 +985,6 @@ class SSBEngine:
                   for d, ix in self.indexes.items() if ix.delta is not None}
         return {"ingest_batches": self._ingest_batches,
                 "compactions": self._compactions, "deltas": deltas}
-
-    # -- compiled query programs ------------------------------------------
-    def _cached_program(self, name: str) -> Callable:
-        """Jitted filter→mask→aggregate consuming cached probes."""
-        prog = self._cached_programs.get(name)
-        if prog is None:
-            spec = SSB_QUERIES[name]
-            prog = jax.jit(partial(_filter_aggregate, spec))
-            self._cached_programs[name] = prog
-        return prog
-
-    def _full_program(self, name: str) -> Callable:
-        """One jitted probe→filter→mask→aggregate program (cache-cold path).
-
-        In jspim mode with a Pallas impl, dimensions that carry a predicate
-        probe through the fused probe+filter kernel — compare, tag-decode,
-        and dimension-filter in a single VMEM pass.
-        """
-        prog = self._full_programs.get(name)
-        if prog is not None:
-            return prog
-        spec = SSB_QUERIES[name]
-        mode, impl = self.mode, self.probe_impl
-        plans = dict(self.plans)  # fixed per engine: safe static closure
-        fuse_filter = mode == "jspim" and impl.startswith("pallas")
-
-        def program(fact_cols, dim_cols, indexes, hots):
-            probes: dict[str, tuple[jax.Array, jax.Array]] = {}
-            for dim in spec.joined_dims():
-                fk = fact_cols[FACT_FK[dim]]
-                if mode == "jspim":
-                    if fuse_filter and dim in spec.dim_filters:
-                        dmask = spec.dim_filters[dim](Table(dim_cols[dim]))
-                        pr = lookup_filtered(indexes[dim], fk, dmask,
-                                             impl=impl)
-                    else:
-                        pr = lookup(indexes[dim], fk, impl=impl,
-                                    plan=plans.get(dim),
-                                    hot_codes=hots.get(dim))
-                    probes[dim] = (pr.found,
-                                   jnp.where(pr.found, pr.payload, -1))
-                elif mode == "baseline":
-                    probes[dim] = baselines.sort_merge_join_unique(
-                        fk, dim_cols[dim][DIM_PK[dim]])
-                else:
-                    probes[dim] = baselines.partitioned_hash_join_unique(
-                        fk, dim_cols[dim][DIM_PK[dim]])
-            return _filter_aggregate(spec, fact_cols, dim_cols, probes)
-
-        prog = jax.jit(program)
-        self._full_programs[name] = prog
-        return prog
-
-    # -- execution ---------------------------------------------------------
-    def _dim_cols(self, spec: QuerySpec) -> dict:
-        return {d: dict(self.tables[d].columns) for d in spec.joined_dims()}
-
-    def run(self, name: str, *, use_cache: bool = True
-            ) -> tuple[jax.Array, jax.Array]:
-        """Execute one query as a single compiled program.
-
-        ``use_cache=True`` (default) consumes the cross-query probe cache;
-        ``use_cache=False`` runs the fully fused probe→…→aggregate program
-        without touching the cache (cold-path benchmark flavor).
-        """
-        spec = SSB_QUERIES[name]
-        fact_cols = dict(self.tables["lineorder"].columns)
-        dim_cols = self._dim_cols(spec)
-        if use_cache:
-            probes = {d: self.probe_dim(d) for d in spec.joined_dims()}
-            return self._cached_program(name)(fact_cols, dim_cols, probes)
-        if self.mode == "jspim":
-            idx = {d: self.indexes[d] for d in spec.joined_dims()}
-            hots = {d: self._hot_codes[d] for d in spec.joined_dims()
-                    if d in self._hot_codes}
-        else:
-            idx, hots = {}, {}
-        return self._full_program(name)(fact_cols, dim_cols, idx, hots)
 
     def _join_eager(self, dim: str) -> tuple[jax.Array, jax.Array]:
         """Un-jitted flavor of ``_join`` (op-by-op dispatch, no caching)."""
@@ -824,14 +1012,3 @@ class SSBEngine:
         probes = {d: self._join_eager(d) for d in spec.joined_dims()}
         return _filter_aggregate(spec, dict(self.tables["lineorder"].columns),
                                  self._dim_cols(spec), probes)
-
-    def run_all(self, names=None, *, use_cache: bool = True
-                ) -> dict[str, tuple[jax.Array, jax.Array]]:
-        """Batched entry point: all queries against the shared probe cache.
-
-        Probes each dimension at most once (cache-warm after the first
-        query that touches it), then executes every compiled program."""
-        out: dict[str, tuple[jax.Array, jax.Array]] = {}
-        for name in (names if names is not None else sorted(SSB_QUERIES)):
-            out[name] = self.run(name, use_cache=use_cache)
-        return out

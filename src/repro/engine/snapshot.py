@@ -1,0 +1,158 @@
+"""MVCC epoch-snapshot serving: lock-free query/ingest separation.
+
+JSPIM's rank-level design assumes queries stream against a stable index
+image while updates land elsewhere (paper §3.2.3); this module is the
+write-side half of that story (DESIGN.md §9).  ``SSBEngine.snapshot()``
+freezes one consistent image — dimension tables, dictionaries, hash
+tables, delta buffers, fact table, probe cache and plan set, all at the
+engine's current epoch — as an :class:`EpochSnapshot`.  The engine then
+keeps advancing its private head image (``append_fact_rows`` / ``ingest``
+/ ``compact``) and publishes every step with an atomic epoch bump, while
+the snapshot keeps serving queries at its epoch:
+
+* **Zero-copy freeze** — jax arrays are immutable values, so the snapshot
+  simply aliases the engine's buffers.  The only mutation in the system
+  is *buffer donation* (the engine's in-place fact-tail write, probe-cache
+  splice and compaction merge), and the engine refuses to donate any
+  buffer generation a live snapshot pins — the first mutation after a
+  snapshot copies into a fresh generation, after which donation re-arms.
+  Pin accounting is refcount-by-liveness: the engine holds snapshots in a
+  ``WeakSet`` and a generation retires when every snapshot pinning it has
+  been released (or garbage collected).
+* **No invalidation path** — a snapshot never invalidates anything.  Its
+  probe cache only grows (lazy probes of dimensions the engine had not
+  cached at freeze time), its plans never re-plan, its programs never
+  retrace: the epoch lives in host state, not in any jit-static argument.
+* **Shared compiled programs** — the snapshot executes through the same
+  ``_QueryRunner`` surface and the same compiled per-query programs as
+  the head engine (shapes and plans are jit keys; the epoch is not), so
+  serving an old epoch costs no compilation and cannot diverge
+  behaviorally from the head's code path.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.engine.queries import DIM_PK, SSBEngine, _QueryRunner
+
+
+class EpochSnapshot(_QueryRunner):
+    """One consistent, immutable image of an :class:`SSBEngine` at epoch E.
+
+    Obtained from ``SSBEngine.snapshot()``.  Supports the engine's whole
+    read surface — ``probe_dim`` / ``warm_cache`` / ``run`` / ``run_all``
+    (cached and fused flavors) — and stays bit-identical to the freeze
+    instant no matter how far the engine advances.  Release it when done
+    (``release()``, or use it as a context manager) so the engine's
+    donation fast paths re-arm; queries on a released snapshot raise.
+    """
+
+    def __init__(self, engine: SSBEngine):
+        self.engine: SSBEngine | None = engine
+        self.epoch = engine.epoch
+        self.fact_epoch = engine.fact_epoch
+        self.mode = engine.mode
+        self.probe_impl = engine.probe_impl
+        # the image: shallow copies of the engine's state dicts — the
+        # values (Tables, DimIndex pytrees, plans, probe tuples) are
+        # immutable, so aliasing them IS the freeze.  The fact table gets
+        # an unowned view so not even a direct append on the snapshot's
+        # table object could donate the shared capacity buffers.
+        tables = dict(engine.tables)
+        tables["lineorder"] = tables["lineorder"].pinned_view()
+        self.tables = tables
+        self.indexes = dict(engine.indexes)
+        self.plans = dict(engine.plans)
+        self._hot_codes = dict(engine._hot_codes)
+        # freeze only probe entries consistent with the fact epoch (stale
+        # stamps — possible only after a bug — read as misses everywhere)
+        self._probe_cache = {
+            d: e for d, e in engine._probe_cache.items()
+            if engine._probe_epoch.get(d) == engine._fact_epoch}
+        # compiled programs: the cached-probe programs are epoch-oblivious
+        # (keyed by query + shapes) and shared with the engine outright;
+        # the fused full programs close over plans statically, so the
+        # snapshot takes a private copy the engine's re-plans cannot clear
+        self._cached_programs = engine._cached_programs
+        self._full_programs = dict(engine._full_programs)
+        # pin records: the buffer generations this snapshot aliases.  The
+        # engine's donation sites check these against their *current*
+        # generations — matching means "donating now would delete arrays
+        # this snapshot reads", so they copy instead.
+        self._pin_fact_gen = engine._fact_gen
+        self._pin_cache_gens = {d: engine._cache_gens.get(d, 0)
+                                for d in self._probe_cache}
+        self._pin_index_gens = {d: engine._index_gens.get(d, 0)
+                                for d in self.indexes}
+        self._released = False
+
+    # -- lifecycle ---------------------------------------------------------
+    @property
+    def released(self) -> bool:
+        return self._released
+
+    def release(self) -> None:
+        """Retire this snapshot's pins (idempotent).
+
+        Drops every buffer reference and unregisters from the engine, so
+        the engine's next mutation may donate again if no *other* live
+        snapshot pins the same generations — the refcounted retirement
+        half of the MVCC story.  After release the snapshot refuses to
+        run queries (its buffers may be donated away at any time).
+        """
+        if self._released:
+            return
+        self._released = True
+        if self.engine is not None:
+            self.engine._snapshots.discard(self)
+        self.engine = None
+        self.tables = {}
+        self.indexes = {}
+        self.plans = {}
+        self._hot_codes = {}
+        self._probe_cache = {}
+        self._full_programs = {}
+
+    def __enter__(self) -> "EpochSnapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def _check_live(self) -> None:
+        if self._released:
+            raise RuntimeError(
+                "EpochSnapshot was released: its buffer pins are retired "
+                "and the engine may have donated the arrays it aliased")
+
+    # -- read surface ------------------------------------------------------
+    def probe_dim(self, dim: str) -> tuple[jax.Array, jax.Array]:
+        """(found, dim_row) for one dimension at this snapshot's epoch.
+
+        Entries frozen from the engine are served as-is; a dimension the
+        engine had not cached at freeze time is probed lazily against the
+        snapshot's own (immutable) index image and memoized locally —
+        the engine's cache is never touched.
+        """
+        self._check_live()
+        hit = self._probe_cache.get(dim)
+        if hit is not None:
+            return hit
+        out = self._join(dim)
+        if not isinstance(out[0], jax.core.Tracer):
+            self._probe_cache[dim] = out
+        return out
+
+    def warm_cache(self, dims=None) -> None:
+        """Probe every (or the given) dimension into the snapshot cache."""
+        for dim in (dims if dims is not None else DIM_PK):
+            self.probe_dim(dim)
+
+    def run(self, name: str, *, use_cache: bool = True):
+        self._check_live()
+        return super().run(name, use_cache=use_cache)
+
+    def cache_info(self) -> dict:
+        return {"epoch": self.epoch, "fact_epoch": self.fact_epoch,
+                "cached_dims": sorted(self._probe_cache),
+                "released": self._released}

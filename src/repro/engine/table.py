@@ -184,6 +184,19 @@ class Table:
         out = writer(out, new, jnp.int32(n0))
         return Table(out, valid_rows=n0 + b, tail_owned=True)
 
+    def pinned_view(self) -> "Table":
+        """A read-only alias of this table for an epoch snapshot.
+
+        Shares the column buffers (zero-copy) but drops ``tail_owned``, so
+        even a direct ``append_tail`` on the view could never donate — and
+        thereby delete — buffers the snapshot's readers still gather from.
+        The engine's own donation gating (``SSBEngine._fact_pinned``) is
+        what protects the *live* table while the snapshot exists; this
+        view protects the snapshot from its holder.
+        """
+        return Table(dict(self.columns), valid_rows=self.valid_rows,
+                     tail_owned=False)
+
     def trimmed(self) -> "Table":
         """An exact-shape copy without capacity padding (oracle rebuilds)."""
         if self.valid_rows is None or self.valid_rows == self.n_physical:

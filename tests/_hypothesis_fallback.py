@@ -100,12 +100,22 @@ def given(*strategies: Strategy):
         n = (s.max_examples if s is not None and s.max_examples
              else settings._active.get("max_examples", DEFAULT_MAX_EXAMPLES))
 
+        # like real hypothesis, the strategies fill the RIGHTMOST
+        # parameters; everything to their left stays visible to pytest
+        # (fixtures, parametrize) through the rewritten __signature__
+        import inspect
+
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        names = [p.name for p in params[len(params) - len(strategies):]]
+
         def wrapper(*args, **kwargs):
             rng = random.Random(f"jspim::{fn.__module__}.{fn.__qualname__}")
             for i in range(n):
-                drawn = tuple(st.draw(rng) for st in strategies)
+                drawn = {nm: st.draw(rng)
+                         for nm, st in zip(names, strategies)}
                 try:
-                    fn(*args, *drawn, **kwargs)
+                    fn(*args, **kwargs, **drawn)
                 except Exception as e:  # pragma: no cover - failure path
                     raise AssertionError(
                         f"falsifying example (#{i}): {drawn!r}") from e
@@ -114,6 +124,8 @@ def given(*strategies: Strategy):
         wrapper.__qualname__ = fn.__qualname__
         wrapper.__doc__ = fn.__doc__
         wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = sig.replace(
+            parameters=params[:len(params) - len(strategies)])
         wrapper.hypothesis_fallback = True
         return wrapper
 

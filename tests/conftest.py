@@ -49,6 +49,21 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture
+def count_lowerings():
+    """Shared recompile-count assertion harness.
+
+    Yields jax's ``count_jit_and_pmap_lowerings`` context-manager factory:
+    ``with count_lowerings() as n: ...; assert n[0] == 0``.  The zero-
+    retrace contracts this guards (steady-state fact appends since PR 4,
+    epoch-snapshot swaps since PR 5) share one requirement: nothing that
+    changes per event — batch content, epoch counters, snapshot identity —
+    may ever become a jit-static argument or mint a new array shape.
+    """
+    from jax._src import test_util as jtu
+    return jtu.count_jit_and_pmap_lowerings
+
+
 @pytest.fixture(scope="session")
 def fact_batch():
     """New lineorder rows resampled from a live fact table's logical rows,

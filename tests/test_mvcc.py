@@ -1,0 +1,649 @@
+"""Snapshot-isolation harness for MVCC epoch serving (DESIGN.md §9).
+
+The serving contract under test: a snapshot taken at epoch E answers
+every query **bit-identically** before, during, and after any sequence
+of ingest / append / delete / compaction that advances the engine to
+E+k — with no invalidation path on the reader side and zero retraces
+across epoch swaps.  Three layers of evidence:
+
+* a randomized interleaving property suite — {snapshot, query,
+  append_fact_rows, ingest, delete, compact, release} timelines checked
+  against a **per-epoch numpy oracle** (a pure-python relational model
+  frozen alongside every snapshot), across forced probe schedules
+  (gathered / deduped / hot_cold, which degenerates to full_map at
+  these dimension sizes);
+* the donation/refcount hazard cases — a pinned snapshot queried after
+  steady-state appends and compactions that would have donated its
+  buffers (the in-place fast paths must refuse and copy), and donation
+  re-arming once the snapshot is released;
+* recompile-count regressions — epoch swaps at fixed batch shapes
+  compile nothing (the epoch lives in engine host state, never in a
+  jit-static argument), and ``compact`` on an empty delta is a strict
+  no-op.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.delta import delta_is_empty, empty_delta
+from repro.core.costmodel import merge_seconds
+from repro.core.planner import plan_compaction
+from repro.engine import SSBEngine, generate_ssb
+from repro.engine.queries import DIM_PK, FACT_FK, SSB_QUERIES
+
+pytestmark = pytest.mark.slow
+
+# queries touching 1..4 dims (group-by shapes included) — enough surface
+# to catch a divergence in any dimension's probe or mask path without
+# paying all 13 queries per verification point
+QUERY_SAMPLE = ("Q1.1", "Q2.1", "Q3.2", "Q4.2", "Q4.3")
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return generate_ssb(sf=0.002, seed=5)
+
+
+# ---------------------------------------------------------------------------
+# per-epoch numpy oracle: a pure-python relational model of the engine state
+# ---------------------------------------------------------------------------
+
+
+class _NT:
+    """Numpy stand-in for ``Table`` accepted by the query-spec lambdas."""
+
+    def __init__(self, cols):
+        self._cols = cols
+
+    def __getitem__(self, name):
+        return self._cols[name]
+
+
+class Logical:
+    """The logical relational state the engine is supposed to represent.
+
+    ``fact`` holds the logical lineorder columns (no capacity padding);
+    ``dims`` the dimension columns; ``deleted`` / ``repointed`` the net
+    effect of delete batches and §3.2.3 index updates.  ``freeze()``
+    deep-copies the model — the per-epoch oracle pinned to a snapshot.
+    """
+
+    def __init__(self, tables):
+        self.fact = {k: np.asarray(tables["lineorder"][k]).copy()
+                     for k in tables["lineorder"].names()}
+        self.dims = {d: {k: np.asarray(tables[d][k]).copy()
+                         for k in tables[d].names()} for d in DIM_PK}
+        self.deleted = {d: set() for d in DIM_PK}
+        self.repointed = {d: {} for d in DIM_PK}
+
+    def freeze(self) -> "Logical":
+        out = Logical.__new__(Logical)
+        out.fact = {k: v.copy() for k, v in self.fact.items()}
+        out.dims = {d: {k: v.copy() for k, v in c.items()}
+                    for d, c in self.dims.items()}
+        out.deleted = {d: set(s) for d, s in self.deleted.items()}
+        out.repointed = {d: dict(m) for d, m in self.repointed.items()}
+        return out
+
+    def key_map(self, dim: str) -> dict:
+        mp = {int(k): i for i, k in enumerate(self.dims[dim][DIM_PK[dim]])}
+        for k in self.deleted[dim]:
+            mp.pop(k, None)
+        mp.update(self.repointed[dim])
+        return mp
+
+    def query(self, name: str):
+        """(total, groups) of one SSB query — same int32 wraparound
+        semantics as the compiled programs (measures summed mod 2**32)."""
+        spec = SSB_QUERIES[name]
+        n = self.fact["orderkey"].shape[0]
+        mask = np.ones(n, bool)
+        rows = {}
+        for dim in spec.joined_dims():
+            mp = self.key_map(dim)
+            fk = self.fact[FACT_FK[dim]]
+            r = np.fromiter((mp.get(int(k), -1) for k in fk), np.int64, n)
+            rows[dim] = r
+            mask &= r >= 0
+            if dim in spec.dim_filters:
+                dmask = np.asarray(
+                    spec.dim_filters[dim](_NT(self.dims[dim])))
+                mask &= dmask[np.clip(r, 0, dmask.shape[0] - 1)]
+        if spec.fact_filter is not None:
+            mask &= np.asarray(spec.fact_filter(_NT(self.fact)))
+        measure = np.asarray(spec.measure(_NT(self.fact))).astype(np.int64)
+        total = np.int64(measure[mask].sum()).astype(np.int32)
+        if not spec.group_by:
+            return int(total), np.asarray([total], np.int32)
+        gk = np.zeros(n, np.int64)
+        size = 1
+        for dim, col, card in spec.group_by:
+            c = self.dims[dim][col]
+            v = c[np.clip(rows[dim], 0, c.shape[0] - 1)] % card
+            gk = gk * card + v
+            size *= card
+        groups = np.zeros(size, np.int64)
+        np.add.at(groups, gk[mask], measure[mask])
+        return int(total), groups.astype(np.int32)
+
+
+def _assert_matches(runner, logical: Logical, names=QUERY_SAMPLE, tag=""):
+    got = runner.run_all(list(names))
+    for q in names:
+        t, g = logical.query(q)
+        assert int(got[q][0]) == t, f"{tag}{q}: total diverges"
+        assert np.array_equal(np.asarray(got[q][1]), g), \
+            f"{tag}{q}: groups diverge"
+
+
+def _mk_fact_batch(logical: Logical, rng, n, start_key, hot_dim=None,
+                   hot_keys=None):
+    src = rng.integers(0, logical.fact["orderkey"].shape[0], n)
+    cols = {k: v[src].copy() for k, v in logical.fact.items()}
+    cols["orderkey"] = np.arange(start_key, start_key + n, dtype=np.int32)
+    if hot_dim is not None and len(hot_keys):
+        pick = rng.random(n) < 0.4
+        cols[FACT_FK[hot_dim]] = np.where(
+            pick, rng.choice(np.asarray(hot_keys, np.int32), n),
+            cols[FACT_FK[hot_dim]]).astype(np.int32)
+    return cols
+
+
+# ---------------------------------------------------------------------------
+# the property suite: randomized interleavings vs the per-epoch oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("schedule", ["auto", "gathered", "deduped",
+                                      "hot_cold"])
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_snapshot_isolation_random_interleavings(tables, schedule, seed):
+    """Every query on every live snapshot equals the numpy oracle frozen
+    at that snapshot's epoch — never a later one — through a randomized
+    {snapshot, query, append, ingest, delete, compact, release} timeline,
+    under every forced probe schedule (hot_cold degenerates to full_map
+    at these dimension sizes, covering that path too)."""
+    rng = np.random.default_rng(seed)
+    eng = SSBEngine(dict(tables), mode="jspim", schedule=schedule)
+    eng.warm_cache()
+    if schedule == "hot_cold":  # these dims fit the slot budget
+        assert all(p.full_map for p in eng.plans.values())
+    logical = Logical(tables)
+    live: list[tuple] = []   # (snapshot, frozen oracle, epoch)
+    next_key = 50_000_000
+    next_dim_key = {d: 10_000_000 + i * 100_000
+                    for i, d in enumerate(DIM_PK)}
+    new_dim_keys = {d: [] for d in DIM_PK}
+
+    def do_snapshot():
+        snap = eng.snapshot()
+        assert snap.epoch == eng.epoch
+        live.append((snap, logical.freeze(), snap.epoch))
+
+    def do_query():
+        if live and rng.random() < 0.7:
+            snap, frozen, epoch = live[rng.integers(0, len(live))]
+            q = QUERY_SAMPLE[rng.integers(0, len(QUERY_SAMPLE))]
+            t, g = frozen.query(q)
+            got = snap.run(q)
+            assert int(got[0]) == t, f"snap@{epoch} {q}"
+            assert np.array_equal(np.asarray(got[1]), g), f"snap@{epoch} {q}"
+        else:
+            q = QUERY_SAMPLE[rng.integers(0, len(QUERY_SAMPLE))]
+            t, g = logical.query(q)
+            got = eng.run(q)
+            assert int(got[0]) == t, f"head {q}"
+            assert np.array_equal(np.asarray(got[1]), g), f"head {q}"
+
+    def do_append():
+        nonlocal next_key
+        n = int(rng.integers(1, 200))
+        dims = [d for d in DIM_PK if new_dim_keys[d]]
+        hot = dims[rng.integers(0, len(dims))] if dims else None
+        batch = _mk_fact_batch(logical, rng, n, next_key, hot,
+                               new_dim_keys.get(hot, []))
+        next_key += n
+        rep = eng.append_fact_rows(batch)
+        assert rep["appended"] == n
+        for k, v in batch.items():
+            logical.fact[k] = np.concatenate([logical.fact[k], v])
+
+    def do_ingest():
+        d = list(DIM_PK)[rng.integers(0, 4)]
+        n = int(rng.integers(1, 40))
+        k0 = next_dim_key[d]
+        next_dim_key[d] += n
+        keys = np.arange(k0, k0 + n, dtype=np.int32)
+        cols = {c: rng.integers(0, 5, n).astype(np.int32)
+                for c in logical.dims[d] if c != DIM_PK[d]}
+        cols[DIM_PK[d]] = keys
+        eng.append_rows(d, cols)
+        for c, v in cols.items():
+            logical.dims[d][c] = np.concatenate([logical.dims[d][c], v])
+        new_dim_keys[d].extend(keys.tolist())
+
+    def do_delete():
+        d = list(DIM_PK)[rng.integers(0, 4)]
+        pk = logical.dims[d][DIM_PK[d]]
+        alive = np.asarray([k for k in pk if int(k) not in
+                            logical.deleted[d]], np.int32)
+        if alive.size < 8:
+            return
+        doomed = rng.choice(alive, int(rng.integers(1, 6)), replace=False)
+        eng.ingest(d, doomed, op="delete", auto_compact=False)
+        logical.deleted[d].update(int(k) for k in doomed)
+
+    def do_compact():
+        d = list(DIM_PK)[rng.integers(0, 4)]
+        eng.compact(d)  # empty delta -> strict no-op, also exercised
+
+    def do_release():
+        if live:
+            snap, _, _ = live.pop(rng.integers(0, len(live)))
+            snap.release()
+            assert snap.released
+
+    actions = [do_snapshot, do_query, do_append, do_ingest, do_delete,
+               do_compact, do_release]
+    weights = np.asarray([2, 4, 3, 2, 1.5, 1, 1], np.float64)
+    weights /= weights.sum()
+    do_snapshot()  # always at least one long-lived snapshot
+    for _ in range(14):
+        actions[rng.choice(len(actions), p=weights)]()
+
+    # final sweep: the head and EVERY still-live snapshot must match their
+    # respective frozen oracles bit-for-bit
+    _assert_matches(eng, logical, tag="final head ")
+    for snap, frozen, epoch in live:
+        _assert_matches(snap, frozen, tag=f"final snap@{epoch} ")
+        snap.release()
+
+
+# ---------------------------------------------------------------------------
+# donation/refcount hazard cases
+# ---------------------------------------------------------------------------
+
+
+def _steady_state_engine(tables, rng, n_appends=4, batch=100):
+    """An engine whose fact buffers and probe caches are donation-armed."""
+    eng = SSBEngine(dict(tables), mode="jspim")
+    eng.warm_cache()
+    logical = Logical(tables)
+    for i in range(n_appends):
+        b = _mk_fact_batch(logical, rng, batch, 20_000_000 + i * batch)
+        eng.append_fact_rows(b)
+        for k, v in b.items():
+            logical.fact[k] = np.concatenate([logical.fact[k], v])
+    assert eng.tables["lineorder"].tail_owned
+    assert eng._cache_owned
+    return eng, logical
+
+
+def test_pinned_snapshot_survives_donating_appends(tables):
+    """The headline hazard: a snapshot pinned at steady state, queried
+    *after* appends that would have donated its buffers in place.  The
+    first append must refuse donation and copy (pin_copies); the next
+    appends donate the fresh generation; the snapshot's results and raw
+    probe arrays stay bit-identical throughout."""
+    rng = np.random.default_rng(17)
+    eng, logical = _steady_state_engine(tables, rng)
+    snap = eng.snapshot()
+    frozen = logical.freeze()
+    base = {d: tuple(np.asarray(x).copy() for x in snap.probe_dim(d))
+            for d in DIM_PK}
+    _assert_matches(snap, frozen, tag="pre-append ")
+
+    pc0 = eng.snapshot_info()["pin_copies"]
+    for i in range(3):  # 1st: pinned copy; 2nd/3rd: donate the fresh gen
+        b = _mk_fact_batch(logical, rng, 100, 30_000_000 + i * 100)
+        rep = eng.append_fact_rows(b)
+        assert all(v == "extended" for v in rep["dims"].values())
+        for k, v in b.items():
+            logical.fact[k] = np.concatenate([logical.fact[k], v])
+    info = eng.snapshot_info()
+    assert info["pin_copies"] > pc0, "pinned append must refuse donation"
+
+    # bit-identical: query results AND the raw cached probe arrays
+    _assert_matches(snap, frozen, tag="post-append ")
+    for d, (f0, r0) in base.items():
+        f1, r1 = snap.probe_dim(d)
+        assert np.array_equal(f0, np.asarray(f1)), d
+        assert np.array_equal(r0, np.asarray(r1)), d
+    # ...while the head serves the advanced epoch
+    _assert_matches(eng, logical, tag="head ")
+    assert eng.epoch > snap.epoch
+    snap.release()
+
+
+def test_release_rearms_donation(tables):
+    """Refcounted retirement: once the last snapshot pinning a generation
+    is released, steady-state appends donate again (no further copies)."""
+    rng = np.random.default_rng(23)
+    eng, logical = _steady_state_engine(tables, rng)
+    s1, s2 = eng.snapshot(), eng.snapshot()
+    b = _mk_fact_batch(logical, rng, 100, 40_000_000)
+    eng.append_fact_rows(b)         # both pin gen g: copy once
+    pc = eng.snapshot_info()["pin_copies"]
+    assert pc > 0
+    s1.release()
+    s2.release()
+    for i in range(2):              # nothing pins the fresh generation
+        eng.append_fact_rows(_mk_fact_batch(logical, rng, 100,
+                                            41_000_000 + i * 100))
+    assert eng.snapshot_info()["pin_copies"] == pc
+    assert eng.snapshot_info()["live_snapshots"] == 0
+
+
+def test_pinned_snapshot_survives_swap_compaction(tables):
+    """Compaction under a pin must swap (fresh buffer pair), not merge in
+    place: the snapshot's lazy probes and fused no-cache queries keep
+    reading the old table afterwards."""
+    eng = SSBEngine(dict(tables), mode="jspim")
+    logical = Logical(tables)
+    snap = eng.snapshot()           # no frozen probes: lazy path only
+    frozen = logical.freeze()
+    n0 = eng.tables["supplier"].n_rows
+    keys = np.arange(7_000_000, 7_000_020, dtype=np.int32)
+    eng.ingest("supplier", keys, np.arange(n0, n0 + 20, dtype=np.int32),
+               op="insert", auto_compact=False)
+    assert eng.compaction_plan("supplier").swap  # pinned: swap flavor
+    eng.compact("supplier")
+    assert eng.indexes["supplier"].delta is None
+    # the snapshot still probes its (pre-ingest) supplier image both ways
+    _assert_matches(snap, frozen, names=("Q3.2", "Q4.2"), tag="cached ")
+    t, g = frozen.query("Q3.2")
+    got = snap.run("Q3.2", use_cache=False)
+    assert int(got[0]) == t and np.array_equal(np.asarray(got[1]), g)
+    snap.release()
+    assert not eng.compaction_plan("supplier").swap
+
+
+def test_released_snapshot_refuses_queries(tables):
+    eng = SSBEngine(dict(tables), mode="jspim")
+    with eng.snapshot() as snap:
+        snap.run("Q1.1")
+    assert snap.released
+    with pytest.raises(RuntimeError, match="released"):
+        snap.run("Q1.1")
+    with pytest.raises(RuntimeError, match="released"):
+        snap.probe_dim("date")
+
+
+# ---------------------------------------------------------------------------
+# recompile-count regressions: epoch swaps must be trace-free
+# ---------------------------------------------------------------------------
+
+
+def test_epoch_swaps_zero_recompiles(tables, count_lowerings):
+    """Zero jit/pmap re-lowerings across >=3 consecutive epoch swaps at
+    steady-state batch shapes, with a fresh snapshot served per epoch:
+    the epoch lives in engine host state, snapshots share the engine's
+    compiled programs, and the pinned-copy flavors reuse the same
+    executables as the aliased-cache flavors PR 4 already compiled."""
+    rng = np.random.default_rng(29)
+    eng = SSBEngine(dict(tables), mode="jspim")
+    eng.warm_cache()
+    logical = Logical(tables)
+    b = 100
+    names = ("Q2.1", "Q4.1")
+
+    def append(i):
+        batch = _mk_fact_batch(logical, rng, b, 60_000_000 + i * b)
+        rep = eng.append_fact_rows(batch)
+        for k, v in batch.items():
+            logical.fact[k] = np.concatenate([logical.fact[k], v])
+        return rep
+
+    def headroom():
+        info = eng.fact_append_info()
+        return info["n_physical"] - info["n_valid"]
+
+    # warmup: guarantee capacity headroom for every measured append, pin
+    # the skew-remeasure trigger, then warm every program the loop uses —
+    # engine + snapshot serving, pinned (copying) and donated flavors
+    i = 0
+    while headroom() < 16 * b + 256:
+        append(i)
+        i += 1
+    eng._maybe_replan_fact_skew(force=True)
+    warm = eng.snapshot()
+    warm.run_all(list(names))
+    append(100)                     # pinned: copying write + splice
+    eng.run_all(list(names))
+    append(101)                     # cache aliased: copying splice
+    append(102)                     # donated flavors
+    warm.release()
+    eng.run_all(list(names))
+
+    with count_lowerings() as count:
+        for i in range(4):
+            snap = eng.snapshot()
+            rep = append(200 + i)
+            assert not rep["capacity_grew"]
+            assert rep["skew_replanned"] == []
+            snap.run_all(list(names))   # serve the OLD epoch
+            eng.run_all(list(names))    # serve the head epoch
+            assert snap.epoch < eng.epoch
+            snap.release()
+    assert count[0] == 0, \
+        f"epoch swaps lowered {count[0]} modules (epoch leaked into a " \
+        "jit key, a shape, or an uncompiled program flavor)"
+
+    # and the served epochs were genuinely different images
+    _assert_matches(eng, logical, names=names, tag="post-loop head ")
+
+
+def test_compact_empty_delta_strict_noop(tables, count_lowerings):
+    """``compact`` with nothing buffered must not invalidate the probe
+    cache, re-plan, drop compiled full programs, publish an epoch, or
+    compile anything — the mirror of PR 4's empty-append fix."""
+    eng = SSBEngine(dict(tables), mode="jspim")
+    eng.warm_cache()
+    eng.run("Q2.1", use_cache=False)   # populate a full program
+    assert eng.indexes["part"].delta is None
+    before_cache = eng.cache_info()
+    before_plan = eng.plans["part"]
+    before_progs = dict(eng._full_programs)
+    before_epoch = eng.epoch
+    before_compactions = eng.ingest_info()["compactions"]
+
+    with count_lowerings() as count:
+        eng.compact("part")            # no delta at all
+    assert count[0] == 0, "empty compact must not compile anything"
+    assert eng.cache_info() == before_cache
+    assert eng.plans["part"] is before_plan
+    assert eng._full_programs == before_progs
+    assert eng.epoch == before_epoch
+    assert eng.ingest_info()["compactions"] == before_compactions
+
+    # a zero-op ingest batch is a strict no-op too: no epoch, no
+    # invalidation, no re-plan, and — crucially — no empty delta minted
+    # (a delta's presence alone retraces probes and taxes every query)
+    plan = eng.ingest("part", np.zeros(0, np.int32), np.zeros(0, np.int32),
+                      op="insert", auto_compact=False)
+    assert plan.reason == "empty" and not plan.compact
+    assert eng.indexes["part"].delta is None
+    assert eng.cache_info() == before_cache
+    assert eng.epoch == before_epoch
+
+    # a manually planted all-empty delta (defensive: unreachable through
+    # the engine surface now) is just as inert under compact
+    eng.indexes["part"] = dataclasses.replace(
+        eng.indexes["part"],
+        delta=empty_delta(256, eng.indexes["part"].table.bucket_width))
+    assert delta_is_empty(eng.indexes["part"].delta)
+    eng.probe_dim("part")
+    before_cache = eng.cache_info()
+    before_plan = eng.plans["part"]
+    eng.compact("part")
+    assert eng.indexes["part"].delta is not None  # untouched, still empty
+    assert eng.cache_info() == before_cache
+    assert eng.plans["part"] is before_plan
+    assert eng.ingest_info()["compactions"] == before_compactions
+    eng.indexes["part"] = dataclasses.replace(eng.indexes["part"],
+                                              delta=None)
+    # a real compaction still compacts
+    eng.ingest("part", np.asarray([8_111_111], np.int32),
+               np.asarray([eng.tables["part"].n_rows], np.int32),
+               op="insert", auto_compact=False)
+    eng.compact("part")
+    assert eng.indexes["part"].delta is None
+    assert eng.ingest_info()["compactions"] == before_compactions + 1
+
+
+@pytest.mark.parametrize("donate", [False, True])
+def test_compaction_grow_fallback_both_flavors_match_oracle(donate):
+    """The merge's geometry-growth fallback reconstructs the rebuild
+    multiset from the *merged* table (+ unplaced inserts) — the original
+    may already be donated away — so both flavors must survive a bucket
+    overflow mid-merge and land bit-identical to a dict oracle."""
+    from repro.engine import build_dim_index, compact_index, ingest_index
+    from repro.engine import lookup
+
+    base = np.arange(64, dtype=np.int32)
+    # tiny buckets at load 1.0: a 200-insert burst must overflow
+    ix = build_dim_index(jnp.asarray(base), bucket_width=2, load=1.0)
+    nb0 = ix.table.num_buckets
+    new = np.arange(1000, 1200, dtype=np.int32)
+    ix = ingest_index(ix, new, np.arange(64, 264, dtype=np.int32),
+                      op="insert")
+    ix = ingest_index(ix, base[:10], op="delete")
+    ix = ingest_index(ix, base[10:20], np.full(10, 7, np.int32),
+                      op="upsert")
+    c = compact_index(ix, donate=donate)
+    assert c.delta is None
+    assert c.table.num_buckets > nb0, "geometry must have grown"
+    mp = {int(k): i for i, k in enumerate(base)}
+    mp.update(zip(new.tolist(), range(64, 264)))
+    for k in base[:10].tolist():
+        del mp[k]
+    for k in base[10:20].tolist():
+        mp[k] = 7
+    stream = np.concatenate([base, new, [999_999]])
+    pr = lookup(c, jnp.asarray(stream))
+    f, p = np.asarray(pr.found), np.asarray(pr.payload)
+    exp_f = np.asarray([int(k) in mp for k in stream])
+    exp_p = np.asarray([mp.get(int(k), -1) for k in stream])
+    assert np.array_equal(f, exp_f)
+    assert np.array_equal(p[f], exp_p[f])
+
+
+def test_swap_merge_priced_above_inplace():
+    """Planner inputs for the snapshot-aware trigger: the swap flavor
+    costs a table copy more, so a pinned amortization trigger defers
+    longer, while occupancy triggers (correctness) are unaffected."""
+    assert merge_seconds(100, 100_000, 8, swap=True) > \
+        merge_seconds(100, 100_000, 8, swap=False)
+    kw = dict(delta_entries=100, delta_slots=4096, fill_frac=0.02,
+              worst_bucket_frac=0.1, n_build=100_000, n_dict=100_000,
+              bucket_width=8)
+    unpinned = plan_compaction(expected_probes=50_000_000, **kw)
+    pinned = plan_compaction(expected_probes=50_000_000, pinned=True, **kw)
+    assert unpinned.compact and unpinned.reason == "amortized"
+    assert not unpinned.swap and pinned.swap
+    assert pinned.est_merge_s > unpinned.est_merge_s
+    # occupancy hazard compacts regardless of pins
+    full = plan_compaction(expected_probes=1000, pinned=True,
+                           **{**kw, "fill_frac": 0.6})
+    assert full.compact and full.reason == "fill" and full.swap
+
+
+# ---------------------------------------------------------------------------
+# dictionary-GC preconditions: delete -> compact -> append interleavings
+# ---------------------------------------------------------------------------
+
+
+def test_full_map_and_hot_tables_size_by_dictionary_n(tables):
+    """Deleted keys' codes stay allocated until dictionary GC exists, so
+    after delete -> compact -> append every full map and hot table must
+    keep sizing by ``dictionary.n`` — live keys hold codes past
+    ``n_unique`` (and past the pre-append ``n``), and a map sized by
+    either stale bound would silently drop them.  Pins the invariant the
+    future generation-counting compactor must preserve: shrinking the
+    dictionary requires re-coding the table, never just re-sizing maps."""
+    eng = SSBEngine(dict(tables), mode="jspim", schedule="hot_cold")
+    eng.warm_cache()
+    ref = SSBEngine(dict(tables), mode="jspim", schedule="gathered")
+    dim = "part"
+    n_dict0 = int(eng.indexes[dim].dictionary.n)
+    assert eng.plans[dim].full_map
+
+    # delete a key block, compact: n_unique shrinks, dictionary.n doesn't
+    doomed = np.asarray(tables[dim]["partkey"])[:40]
+    for e in (eng, ref):
+        e.ingest(dim, doomed, op="delete", auto_compact=False)
+        e.compact(dim)
+    idx = eng.indexes[dim]
+    assert int(idx.table.n_unique) == n_dict0 - 40
+    assert int(idx.dictionary.n) == n_dict0
+    plan = eng.plans[dim]
+    assert plan.full_map and plan.hot_entries == n_dict0, \
+        "full map must size by dictionary.n, not n_unique"
+
+    # append fresh keys: their codes land PAST the deleted range
+    n0 = eng.tables[dim].n_rows
+    new = np.arange(9_000_000, 9_000_060, dtype=np.int32)
+    rows = {"partkey": new, "mfgr": np.zeros(60, np.int32),
+            "category": np.full(60, 3, np.int32),
+            "brand": np.full(60, 260, np.int32)}
+    for e in (eng, ref):
+        e.append_rows(dim, rows)
+        e.compact(dim)
+    idx = eng.indexes[dim]
+    assert int(idx.dictionary.n) == n_dict0 + 60
+    plan = eng.plans[dim]
+    assert plan.full_map and plan.hot_entries == n_dict0 + 60
+    assert plan.hot_slots >= 1 << (n_dict0 + 60 - 1).bit_length()
+
+    # the full-map probe agrees with the gathered reference on every
+    # query — including rows that join the new (high-code) keys
+    rng = np.random.default_rng(31)
+    batch_src = rng.integers(0, eng.tables["lineorder"].n_rows, 300)
+    lo = eng.tables["lineorder"]
+    batch = {k: np.asarray(lo[k])[:lo.n_rows][batch_src].copy()
+             for k in lo.names()}
+    batch["orderkey"] = np.arange(70_000_000, 70_000_300, dtype=np.int32)
+    batch["partkey"] = np.where(rng.random(300) < 0.5,
+                                rng.choice(new, 300),
+                                batch["partkey"]).astype(np.int32)
+    for e in (eng, ref):
+        e.append_fact_rows({k: v.copy() for k, v in batch.items()})
+    a, b = eng.run_all(), ref.run_all()
+    for q in a:
+        assert int(a[q][0]) == int(b[q][0]), q
+        assert np.array_equal(np.asarray(a[q][1]), np.asarray(b[q][1])), q
+    fa, ra = (np.asarray(x) for x in eng.probe_dim(dim))
+    fb, rb = (np.asarray(x) for x in ref.probe_dim(dim))
+    assert np.array_equal(fa, fb) and np.array_equal(ra[fa], rb[fb])
+    assert fa[:lo.n_rows].sum() > 0
+
+
+def test_snapshot_spans_delete_compact_append_interleaving(tables):
+    """A snapshot pinned across the whole GC-shaped interleaving (delete,
+    compact, append, compact) keeps serving the pre-delete image."""
+    eng = SSBEngine(dict(tables), mode="jspim", schedule="hot_cold")
+    eng.warm_cache()
+    logical = Logical(tables)
+    snap = eng.snapshot()
+    frozen = logical.freeze()
+    dim = "date"
+    doomed = np.asarray(tables[dim]["datekey"])[5:12]
+    eng.ingest(dim, doomed, op="delete", auto_compact=False)
+    logical.deleted[dim].update(int(k) for k in doomed)
+    eng.compact(dim)
+    n0 = eng.tables[dim].n_rows
+    new = np.arange(30_000_000, 30_000_010, dtype=np.int32)
+    cols = {c: np.zeros(10, np.int32) for c in logical.dims[dim]
+            if c != DIM_PK[dim]}
+    cols[DIM_PK[dim]] = new
+    eng.append_rows(dim, cols)
+    for c, v in cols.items():
+        logical.dims[dim][c] = np.concatenate([logical.dims[dim][c], v])
+    eng.compact(dim)
+    _assert_matches(snap, frozen, names=("Q1.1", "Q4.2"), tag="snap ")
+    _assert_matches(eng, logical, names=("Q1.1", "Q4.2"), tag="head ")
+    snap.release()

@@ -130,6 +130,28 @@ out["fact_append_sharded"] = bool(
     and np.array_equal(f, np.asarray(cf))
     and np.array_equal(np.asarray(ref.payload)[f], np.asarray(cr)[f])
     and not f[eng.tables["lineorder"].n_rows:].any())
+# MVCC epoch snapshot (DESIGN.md 9): a sharded probe served from a pinned
+# snapshot must keep matching the frozen image bit-for-bit while the head
+# appends (donation refused -> copy), ingests and swap-compacts
+snap = eng.snapshot()
+ref_f, ref_r = np.asarray(cf).copy(), np.asarray(cr).copy()
+batch2 = {{k: np.asarray(lo[k])[src] for k in lo.names()}}
+batch2["orderkey"] = np.arange(2 * 10**7, 2 * 10**7 + 700, dtype=np.int32)
+eng.append_fact_rows(batch2)
+eng.ingest("part", jnp.arange(2 * 10**6, 2 * 10**6 + 50, dtype=jnp.int32),
+           jnp.arange(n_part, n_part + 50, dtype=jnp.int32),
+           op="insert", auto_compact=False)
+eng.compact("part")  # pinned: must take the swap flavor
+sf_, sr_ = snap.probe_dim("part")
+spr = sharded_lookup(snap.indexes["part"],
+                     snap.tables["lineorder"]["partkey"], mesh)
+out["mvcc_snapshot_sharded"] = bool(
+    eng.snapshot_info()["pin_copies"] > 0
+    and np.array_equal(ref_f, np.asarray(sf_))
+    and np.array_equal(ref_r, np.asarray(sr_))
+    and np.array_equal(ref_f, np.asarray(spr.found))
+    and np.array_equal(ref_r[ref_f], np.asarray(spr.payload)[ref_f]))
+snap.release()
 print("RESULT::" + json.dumps(out))
 """
 
@@ -173,3 +195,11 @@ def test_sharded_fact_append_matches_single_device(result):
     """Sharded probe over the capacity-padded fact column == plain probe
     == the engine's tail-extended probe cache (padding never joins)."""
     assert result["fact_append_sharded"]
+
+
+def test_sharded_probe_from_pinned_snapshot(result):
+    """A sharded probe over a pinned epoch snapshot's image stays
+    bit-identical to the freeze instant while the head appends (pin
+    refuses donation), ingests and swap-compacts — the rank-parallel
+    flavor of the MVCC serving contract."""
+    assert result["mvcc_snapshot_sharded"]
