@@ -1,2 +1,5 @@
-from repro.checkpoint.manager import CheckpointManager, latest_step, restore, save
-__all__ = ["CheckpointManager", "latest_step", "restore", "save"]
+from repro.checkpoint.manager import (CheckpointCorruptError,
+                                      CheckpointManager, latest_step,
+                                      load_arrays, restore, save, steps)
+__all__ = ["CheckpointCorruptError", "CheckpointManager", "latest_step",
+           "load_arrays", "restore", "save", "steps"]

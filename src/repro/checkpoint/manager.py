@@ -2,8 +2,15 @@
 
 Layout:  <dir>/step_<N>/  — one ``.npy`` per leaf + ``manifest.json`` with
 the flattened tree paths.  Writes go to ``step_<N>.tmp`` and are renamed
-only after fsync — a crash mid-save never corrupts the latest checkpoint,
-and ``latest_step`` simply ignores ``.tmp`` dirs (restart-safe).
+only after every leaf file and the manifest are fsynced — a crash mid-save
+never corrupts the latest checkpoint, ``latest_step`` simply ignores
+``.tmp`` dirs (restart-safe), and the stale ``.tmp`` a crashed save leaves
+behind is garbage-collected on the next ``save``/``latest_step``.
+
+Integrity: the manifest stores a CRC32 of every leaf's raw bytes,
+verified on restore — a corrupt leaf raises :class:`CheckpointCorruptError`
+naming the leaf, so callers with older checkpoints (the durability tier's
+recovery path) can fall back instead of silently loading garbage.
 
 On restore, leaves are ``device_put`` against the *current* mesh's shardings
 (supplied by the caller), so a checkpoint taken on one mesh restores onto a
@@ -14,9 +21,14 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zlib
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(ValueError):
+    """A checkpoint failed integrity verification (names the bad piece)."""
 
 
 def _path_str(path) -> str:
@@ -33,8 +45,37 @@ def _path_str(path) -> str:
     return ".".join(parts)
 
 
-def save(ckpt_dir: str, step: int, tree) -> str:
-    """Atomic write of a pytree checkpoint; returns the final directory."""
+def _fsync_dir(path: str) -> None:
+    """Best-effort directory fsync (makes the rename itself durable)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platforms without dir fds
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover
+        pass
+    finally:
+        os.close(fd)
+
+
+def _gc_tmp(ckpt_dir: str) -> None:
+    """Remove stale ``step_*.tmp`` dirs left behind by a crashed save."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
+    """Atomic write of a pytree checkpoint; returns the final directory.
+
+    ``extra`` (JSON-serializable) rides along in the manifest — the
+    durability tier stores the engine's static metadata (epochs, hash
+    modes, static geometry) next to the array leaves this way.
+    """
+    _gc_tmp(ckpt_dir)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -42,39 +83,77 @@ def save(ckpt_dir: str, step: int, tree) -> str:
     os.makedirs(tmp, exist_ok=True)
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     manifest = {"step": step, "leaves": []}
+    if extra is not None:
+        manifest["extra"] = extra
     for i, (path, leaf) in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         fn = f"leaf_{i:05d}.npy"
         dtype = str(arr.dtype)
         if dtype == "bfloat16":  # npy has no bf16: store the uint16 view
             arr = arr.view(np.uint16)
-        np.save(os.path.join(tmp, fn), arr)
+        with open(os.path.join(tmp, fn), "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
         manifest["leaves"].append(
             {"path": _path_str(path), "file": fn,
-             "dtype": dtype, "shape": list(arr.shape)})
+             "dtype": dtype, "shape": list(arr.shape),
+             "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes())})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    _fsync_dir(ckpt_dir)
     return final
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def steps(ckpt_dir: str) -> list[int]:
+    """All complete checkpoint steps, ascending (``.tmp`` dirs ignored)."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                  if d.startswith("step_") and not d.endswith(".tmp"))
 
 
-def restore(ckpt_dir: str, step: int, template, shardings=None):
+def latest_step(ckpt_dir: str) -> int | None:
+    _gc_tmp(ckpt_dir)
+    all_steps = steps(ckpt_dir)
+    return all_steps[-1] if all_steps else None
+
+
+def _load_leaf(step_dir: str, entry: dict, verify: bool) -> np.ndarray:
+    fp = os.path.join(step_dir, entry["file"])
+    try:
+        arr = np.load(fp)
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"checkpoint leaf {entry['path']!r} ({fp}) is unreadable: "
+            f"{e}") from e
+    if verify and "crc32" in entry:
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+        if crc != entry["crc32"]:
+            raise CheckpointCorruptError(
+                f"checkpoint leaf {entry['path']!r} ({fp}) failed CRC32 "
+                f"verification: stored {entry['crc32']:#010x}, "
+                f"computed {crc:#010x}")
+    if entry["dtype"] == "bfloat16":
+        import ml_dtypes
+        arr = arr.view(ml_dtypes.bfloat16)
+    return arr
+
+
+def restore(ckpt_dir: str, step: int, template, shardings=None,
+            verify: bool = True):
     """Restore into the structure of ``template``; optionally reshard.
 
     ``shardings``: matching pytree of NamedShardings (or None leaves) for
-    elastic placement on the current mesh.
+    elastic placement on the current mesh.  Leaf CRCs are verified when
+    the manifest carries them (``verify=True``); a mismatch raises
+    :class:`CheckpointCorruptError` naming the corrupt leaf.
     """
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
@@ -87,15 +166,34 @@ def restore(ckpt_dir: str, step: int, template, shardings=None):
                     else [None] * len(leaves))
     out = []
     for entry, tmpl, sh in zip(manifest["leaves"], leaves, shard_leaves):
-        arr = np.load(os.path.join(d, entry["file"]))
-        if entry["dtype"] == "bfloat16":
-            import ml_dtypes
-            arr = arr.view(ml_dtypes.bfloat16)
+        arr = _load_leaf(d, entry, verify)
         assert list(arr.shape) == list(tmpl.shape), (
             entry["path"], arr.shape, tmpl.shape)
         out.append(jax.device_put(arr, sh) if sh is not None
                    else jax.numpy.asarray(arr))
     return tdef.unflatten(out)
+
+
+def load_arrays(ckpt_dir: str, step: int, verify: bool = True
+                ) -> tuple[dict[str, np.ndarray], dict | None]:
+    """Template-free restore: ``{dotted-tree-path: host array}`` + extra.
+
+    The durability tier's recovery path — it has no template (the engine
+    is *built from* the checkpoint), so leaves come back keyed by the
+    manifest's flattened tree paths, with CRC verification on by default.
+    Raises :class:`CheckpointCorruptError` on a missing manifest, an
+    unreadable leaf, or a CRC mismatch — never returns partial state.
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint step {step} at {d} has no readable manifest: "
+            f"{e}") from e
+    out = {e["path"]: _load_leaf(d, e, verify) for e in manifest["leaves"]}
+    return out, manifest.get("extra")
 
 
 class CheckpointManager:
@@ -106,17 +204,18 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(ckpt_dir, exist_ok=True)
 
-    def save(self, step: int, tree) -> str:
-        path = save(self.dir, step, tree)
-        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.dir)
-                       if d.startswith("step_") and not d.endswith(".tmp"))
-        for s in steps[:-self.keep]:
+    def save(self, step: int, tree, extra: dict | None = None) -> str:
+        path = save(self.dir, step, tree, extra=extra)
+        for s in steps(self.dir)[:-self.keep]:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
                           ignore_errors=True)
         return path
 
     def latest(self) -> int | None:
         return latest_step(self.dir)
+
+    def steps(self) -> list[int]:
+        return steps(self.dir)
 
     def restore_latest(self, template, shardings=None):
         s = self.latest()

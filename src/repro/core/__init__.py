@@ -28,8 +28,9 @@ from repro.core.lookup import (HotTable, JoinResult, ProbeResult,
                                probe_with_delta, select_distinct,
                                select_where_eq, splice_probe,
                                unpack_words)
-from repro.core.planner import (CompactionPlan, FactAppendPlan,
-                                SchedulePlan, plan_compaction,
+from repro.core.planner import (CheckpointPlan, CompactionPlan,
+                                FactAppendPlan, SchedulePlan,
+                                plan_checkpoint, plan_compaction,
                                 plan_fact_append, plan_probe,
                                 refine_plan, skew_drift)
 from repro.core.skew import SkewStats, measure_skew, top_keys
@@ -49,8 +50,8 @@ __all__ = [
     "overlay_delta", "pack_words", "probe_hot_cold",
     "probe_with_delta", "unpack_words", "join", "probe",
     "probe_deduped", "select_distinct", "select_where_eq",
-    "CompactionPlan", "FactAppendPlan", "SchedulePlan",
-    "plan_compaction", "plan_fact_append", "plan_probe",
+    "CheckpointPlan", "CompactionPlan", "FactAppendPlan", "SchedulePlan",
+    "plan_checkpoint", "plan_compaction", "plan_fact_append", "plan_probe",
     "refine_plan", "skew_drift", "SkewStats", "measure_skew",
     "top_keys",
 ]

@@ -452,6 +452,48 @@ def rebuild_seconds(n_build: int, bucket_width: int,
     return ns * 1e-9
 
 
+# --------------------------------------------------------------------------
+# Durability pricing: WAL-suffix replay vs checkpoint write (DESIGN.md §10,
+# planner input: core/planner.py:plan_checkpoint)
+# --------------------------------------------------------------------------
+
+# Conservative sustained sequential write rate for the checkpoint's leaf
+# files + fsyncs (fsync-bound commodity SSD class, not burst cache).
+CKPT_DISK_BYTES_PER_S = 0.5e9
+# Fixed per-save overhead: tmp dir create, per-leaf file opens, manifest
+# fsync, directory fsyncs, atomic rename.
+CKPT_SAVE_FLOOR_S = 5e-3
+# Fused-op dispatches per replayed mutation record: a replayed batch
+# re-runs the live ingest/append pipeline (delta apply or tail write +
+# tail probe + splice, each a handful of jitted ops) — on a CPU host the
+# per-record cost is dispatch-dominated, which is why replay debt grows
+# per *record* as much as per byte.
+REPLAY_OPS_PER_RECORD = 30
+
+
+def checkpoint_write_seconds(state_bytes: int) -> float:
+    """Modeled wall seconds to write one engine checkpoint of this size."""
+    return state_bytes / CKPT_DISK_BYTES_PER_S + CKPT_SAVE_FLOOR_S
+
+
+def wal_replay_seconds(log_bytes: int, n_records: int = 0,
+                       backend: str = "cpu") -> float:
+    """Modeled recovery cost of replaying a WAL suffix.
+
+    Replay re-executes every logged batch through the normal mutation API
+    (the durability contract — same delta/compaction/tail code paths as
+    live ingest): a per-element stream term over the logged array bytes
+    plus a fixed dispatch term per record.  This is the debt a checkpoint
+    retires, so ``plan_checkpoint`` weighs it against
+    ``checkpoint_write_seconds``.
+    """
+    c = HOST_COSTS.get(backend, HOST_COSTS["cpu"])
+    elems = max(0, log_bytes) / 4          # logged arrays are int32
+    ns = (elems * 10.0 * c.pass_ns          # delta apply / tail write+probe
+          + n_records * REPLAY_OPS_PER_RECORD * c.op_ns)
+    return ns * 1e-9
+
+
 def data_overhead_bytes(n_fact: int, n_dim: int, dup_total: int,
                         cfg: PIMConfig = PIMConfig()) -> dict:
     """§4.2.1 accounting: dictionary + encoded fact copy + hash table + dup list."""

@@ -304,6 +304,56 @@ def plan_fact_append(plan: SchedulePlan, *, n_tail: int, n_cached: int,
                           est_tail_s=tail, est_reprobe_s=reprobe)
 
 
+# ---------------------------------------------------------------------------
+# Durability planning: when does the WAL suffix earn a fresh checkpoint?
+# ---------------------------------------------------------------------------
+
+# Checkpoint only once the modeled replay debt of the accumulated log
+# suffix exceeds this multiple of the checkpoint's own write cost: the
+# model is coarse on both sides, and a premature checkpoint steals disk
+# bandwidth from the WAL's fsync path for a recovery that may never run.
+CKPT_SAFETY = 2.0
+# Below this many logged bytes the decision is not even priced — a
+# checkpoint per tiny mutation would turn every ingest into a state dump.
+CKPT_MIN_LOG_BYTES = 1 << 16
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPlan:
+    """Hashable checkpoint-or-defer decision for the durability tier."""
+
+    checkpoint: bool
+    reason: str          # "replay_debt" | "log_small" | "write_dominates"
+    est_replay_s: float  # modeled recovery replay of the current suffix
+    est_write_s: float   # modeled cost of writing the checkpoint now
+
+
+def plan_checkpoint(*, log_bytes: int, n_records: int, state_bytes: int,
+                    backend: str = "cpu", safety: float = CKPT_SAFETY,
+                    min_log_bytes: int = CKPT_MIN_LOG_BYTES
+                    ) -> CheckpointPlan:
+    """Decide whether the WAL suffix since the last checkpoint justifies
+    snapshotting the engine state now (DESIGN.md §10).
+
+    The trade is recovery time against write cost: every logged byte and
+    record adds replay debt (``costmodel.wal_replay_seconds`` — replay
+    re-runs the mutation API, so it is dispatch- as much as byte-bound),
+    while a checkpoint costs one serialized state write
+    (``costmodel.checkpoint_write_seconds``).  Checkpoint when the debt
+    exceeds ``safety`` x the write cost; the ``min_log_bytes`` floor keeps
+    tiny-mutation streams from checkpointing per batch regardless of how
+    small the state is.
+    """
+    replay = costmodel.wal_replay_seconds(log_bytes, n_records,
+                                          backend=backend)
+    write = costmodel.checkpoint_write_seconds(state_bytes)
+    if log_bytes < min_log_bytes:
+        return CheckpointPlan(False, "log_small", replay, write)
+    if replay > safety * write:
+        return CheckpointPlan(True, "replay_debt", replay, write)
+    return CheckpointPlan(False, "write_dominates", replay, write)
+
+
 def skew_drift(old: SkewStats, new: SkewStats) -> float:
     """How far the fact-side top-share curve moved (re-plan trigger input).
 

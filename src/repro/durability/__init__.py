@@ -1,0 +1,20 @@
+"""Durability tier: epoch-keyed WAL, checkpoints, crash recovery.
+
+DESIGN.md §10.  Entry points: ``SSBEngine.persist(root)`` to start
+logging, ``SSBEngine.open(root)`` to recover; the classes here are the
+machinery behind them (and the crash-injection surface for tests).
+"""
+from repro.durability.fsio import CrashPoint, FailpointFS, OsFS
+from repro.durability.manager import (DurabilityManager, RecoveryError,
+                                      apply_record, open_engine)
+from repro.durability.state import (build_engine_from_state, engine_state,
+                                    state_nbytes)
+from repro.durability.wal import (KINDS, SEMANTIC_KINDS, WALError,
+                                  WALRecord, WriteAheadLog, read_records,
+                                  scan)
+
+__all__ = ["CrashPoint", "FailpointFS", "OsFS", "DurabilityManager",
+           "RecoveryError", "apply_record", "open_engine",
+           "build_engine_from_state", "engine_state", "state_nbytes",
+           "KINDS", "SEMANTIC_KINDS", "WALError", "WALRecord",
+           "WriteAheadLog", "read_records", "scan"]

@@ -1,0 +1,153 @@
+"""Engine-state (de)serialization for epoch checkpoints (DESIGN.md §10).
+
+A checkpoint captures one published epoch's **logical** state — exactly
+what a fresh process needs to answer the 13 queries bit-identically and
+keep ingesting:
+
+* every table's columns, the fact table trimmed to ``valid_rows``
+  (capacity padding is an execution artifact, not data — the restored
+  engine re-grows its own tail);
+* every dimension index verbatim: dictionary (keys / n / codes), hash
+  table arrays, and the delta buffer if one is live.  The raw index state
+  must be saved — ``ingest`` deletes/upserts mutate only the index, so it
+  is *not* derivable from the dimension table;
+* the epoch counters, plus the static geometry (hash modes, build stats)
+  as JSON metadata.
+
+Deliberately NOT captured: probe caches, plans, hot tables, compiled
+programs, and ``BuildStats.fact_skew`` — all derived state the restored
+engine recomputes (skew is re-measured over the restored FK column).
+Plans may therefore differ from the crashed process's plans, which is
+safe by the schedule-invariance contract: every probe schedule is
+bit-identical by construction (the differential suites prove it), so the
+recovered epoch's *results* cannot depend on the re-planned choice.
+
+The array tree serializes through ``checkpoint/manager.py`` (atomic
+write-fsync-rename, per-leaf CRC32); this module only defines the split
+between array leaves and static metadata, and rebuilds an ``SSBEngine``
+from the loaded pair.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.delta import DeltaTable
+from repro.core.dictionary import Dictionary
+from repro.core.hash_table import JSPIMTable
+from repro.core.skew import measure_skew
+from repro.engine.join import BuildStats, DimIndex
+from repro.engine.table import Table
+
+STATE_VERSION = 1
+
+_TBL_FIELDS = ("keys", "values", "dup_offsets", "dup_indices",
+               "group_count", "n_unique", "n_build", "overflow")
+_DELTA_FIELDS = ("keys", "words", "fill", "n_ops", "overflow")
+_STATS_FIELDS = ("num_buckets", "bucket_width", "n_unique", "n_build",
+                 "overflow", "grow_retries", "load")
+
+
+def engine_state(src) -> tuple[dict, dict]:
+    """(array_tree, meta) of an engine or epoch snapshot's logical state.
+
+    ``src`` is an ``SSBEngine`` or (preferably, for off-the-serving-path
+    checkpointing) a live ``EpochSnapshot`` — both expose ``tables`` /
+    ``indexes`` / ``epoch`` / ``fact_epoch`` / ``mode``.
+    """
+    tree: dict = {"tables": {}, "indexes": {}}
+    for name, t in src.tables.items():
+        n = t.n_rows
+        tree["tables"][name] = {k: np.asarray(t[k])[:n]
+                                for k in t.names()}
+    meta: dict = {"version": STATE_VERSION, "mode": src.mode,
+                  "epoch": int(src.epoch),
+                  "fact_epoch": int(src.fact_epoch), "dims": {}}
+    for dim, idx in src.indexes.items():
+        leaf: dict = {"dict_keys": np.asarray(idx.dictionary.keys),
+                      "dict_n": np.asarray(idx.dictionary.n)}
+        if idx.dictionary.codes is not None:
+            leaf["dict_codes"] = np.asarray(idx.dictionary.codes)
+        for f in _TBL_FIELDS:
+            leaf[f"tbl_{f}"] = np.asarray(getattr(idx.table, f))
+        dm: dict = {"hash_mode": idx.table.hash_mode,
+                    "has_delta": idx.delta is not None}
+        if idx.delta is not None:
+            for f in _DELTA_FIELDS:
+                leaf[f"dl_{f}"] = np.asarray(getattr(idx.delta, f))
+            dm["delta_hash_mode"] = idx.delta.hash_mode
+        if idx.stats is not None:
+            dm["stats"] = {f: getattr(idx.stats, f) for f in _STATS_FIELDS}
+        tree["indexes"][dim] = leaf
+        meta["dims"][dim] = dm
+    return tree, meta
+
+
+def state_nbytes(src) -> int:
+    """Cheap size estimate of a checkpoint of ``src`` (trigger input)."""
+    total = sum(t.n_rows * len(t.names()) * 4 for t in src.tables.values())
+    for idx in src.indexes.values():
+        total += sum(int(np.prod(a.shape)) * 4
+                     for a in jax.tree_util.tree_leaves(idx))
+    return total
+
+
+def _leaves(arrays: dict[str, np.ndarray], prefix: str
+            ) -> dict[str, np.ndarray]:
+    """Sub-tree of a dotted-path leaf dict under one ``prefix.``"""
+    p = prefix + "."
+    return {k[len(p):]: v for k, v in arrays.items() if k.startswith(p)}
+
+
+def build_engine_from_state(arrays: dict[str, np.ndarray], meta: dict, *,
+                            probe_impl: str = "xla",
+                            schedule: str = "auto"):
+    """Rebuild a queryable ``SSBEngine`` from a loaded checkpoint.
+
+    ``arrays`` is ``checkpoint.load_arrays``'s dotted-path leaf dict and
+    ``meta`` the manifest ``extra``.  Indexes are reconstructed verbatim
+    (no rebuild — recovery must resume the exact logical index state,
+    deltas included); fact-side skew is re-measured and the probe plans
+    re-derived, both schedule-invariant.
+    """
+    from repro.engine.queries import FACT_FK, SSBEngine
+
+    if meta.get("version") != STATE_VERSION:
+        raise ValueError(f"unsupported engine-state version "
+                         f"{meta.get('version')!r}")
+    table_names = sorted({k.split(".")[1] for k in arrays
+                          if k.startswith("tables.")})
+    tables = {name: Table.from_numpy(_leaves(arrays, f"tables.{name}"))
+              for name in table_names}
+    fact_cols = {k: np.asarray(v)
+                 for k, v in _leaves(arrays, "tables.lineorder").items()}
+    indexes: dict[str, DimIndex] = {}
+    for dim, dm in meta["dims"].items():
+        leaf = _leaves(arrays, f"indexes.{dim}")
+        d = Dictionary(
+            keys=jnp.asarray(leaf["dict_keys"]),
+            n=jnp.asarray(leaf["dict_n"]),
+            codes=(jnp.asarray(leaf["dict_codes"])
+                   if "dict_codes" in leaf else None))
+        tbl = JSPIMTable(
+            **{f: jnp.asarray(leaf[f"tbl_{f}"]) for f in _TBL_FIELDS},
+            hash_mode=dm["hash_mode"])
+        delta = None
+        if dm["has_delta"]:
+            delta = DeltaTable(
+                **{f: jnp.asarray(leaf[f"dl_{f}"]) for f in _DELTA_FIELDS},
+                hash_mode=dm["delta_hash_mode"])
+        stats = None
+        if "stats" in dm:
+            stats = BuildStats(
+                **dm["stats"],
+                fact_skew=measure_skew(fact_cols[FACT_FK[dim]]))
+        indexes[dim] = DimIndex(dictionary=d, table=tbl, stats=stats,
+                                delta=delta)
+    eng = SSBEngine(tables, mode=meta["mode"], probe_impl=probe_impl,
+                    schedule=schedule,
+                    indexes=indexes if meta["mode"] == "jspim" else None)
+    eng._epoch = int(meta["epoch"])
+    eng._fact_epoch = int(meta["fact_epoch"])
+    return eng

@@ -92,6 +92,33 @@ DIM_PK = {"customer": "custkey", "supplier": "suppkey",
           "part": "partkey", "date": "datekey"}
 
 
+def _check_batch_col(arg: str, values, *,
+                     expect_len: int | None = None) -> np.ndarray:
+    """API-boundary validation of one host batch column.
+
+    Raises ``ValueError`` naming the offending argument — mis-shaped or
+    wrong-dtype batches must die here with a readable error, not deep
+    inside a jitted program with an opaque shape message.  This is also a
+    durability requirement: WAL replay trusts recorded batches, so only
+    batches that passed this gate may ever be logged.
+    """
+    a = np.asarray(values)
+    if a.dtype.kind not in "iu":
+        raise ValueError(f"{arg}: expected an integer array, got dtype "
+                         f"{a.dtype}")
+    if a.ndim != 1:
+        raise ValueError(f"{arg}: expected a 1-D array, got shape "
+                         f"{tuple(a.shape)}")
+    if a.size and (int(a.min()) < -(2 ** 31)
+                   or int(a.max()) > 2 ** 31 - 1):
+        raise ValueError(f"{arg}: values exceed the engine's int32 key "
+                         "space")
+    if expect_len is not None and a.shape[0] != expect_len:
+        raise ValueError(f"{arg}: length {a.shape[0]} != {expect_len} "
+                         "(ragged batch)")
+    return a.astype(np.int32, copy=False)
+
+
 @dataclasses.dataclass(frozen=True)
 class QuerySpec:
     name: str
@@ -394,7 +421,8 @@ class SSBEngine(_QueryRunner):
     """
 
     def __init__(self, tables: dict[str, Table], mode: str = "jspim",
-                 probe_impl: str = "xla", schedule: str = "auto"):
+                 probe_impl: str = "xla", schedule: str = "auto", *,
+                 indexes: dict[str, DimIndex] | None = None):
         self.tables = tables
         self.mode = mode
         self.probe_impl = probe_impl
@@ -402,17 +430,29 @@ class SSBEngine(_QueryRunner):
         self.indexes: dict[str, DimIndex] = {}
         self.plans: dict[str, SchedulePlan] = {}
         self._hot_codes: dict[str, jax.Array] = {}
+        # durability tier (DESIGN.md §10): attached by
+        # DurabilityManager.create / SSBEngine.open; None = volatile engine
+        self._durability = None
         if mode == "jspim":
-            # built once, reused across queries (§3.2.3 persistence); the
-            # fact FK column rides along so BuildStats records its skew
-            # (sliced to the logical rows — capacity padding is not data)
-            n_fact = tables["lineorder"].n_rows
-            for dim, pk in DIM_PK.items():
-                self.indexes[dim] = build_dim_index(
-                    tables[dim][pk],
-                    fact_keys=np.asarray(
-                        tables["lineorder"][FACT_FK[dim]])[:n_fact])
-                self._plan_dim(dim)
+            if indexes is not None:
+                # durability restore path: adopt the checkpointed index
+                # state verbatim (deltas included — it is NOT derivable
+                # from the dimension tables) and only re-derive plans
+                self.indexes = dict(indexes)
+                for dim in self.indexes:
+                    self._plan_dim(dim)
+            else:
+                # built once, reused across queries (§3.2.3 persistence);
+                # the fact FK column rides along so BuildStats records its
+                # skew (sliced to logical rows — capacity padding is not
+                # data)
+                n_fact = tables["lineorder"].n_rows
+                for dim, pk in DIM_PK.items():
+                    self.indexes[dim] = build_dim_index(
+                        tables[dim][pk],
+                        fact_keys=np.asarray(
+                            tables["lineorder"][FACT_FK[dim]])[:n_fact])
+                    self._plan_dim(dim)
         # cross-query probe cache: dim -> (found, dim_row) over fact rows,
         # each entry stamped with the fact epoch it is consistent with
         self._probe_cache: dict[str, tuple[jax.Array, jax.Array]] = {}
@@ -612,8 +652,78 @@ class SSBEngine(_QueryRunner):
                 "pin_copies": self._pin_copies,
                 "fact_gen": self._fact_gen}
 
+    # -- durability tier (WAL + checkpoints, DESIGN.md §10) ----------------
+    def _wal_log(self, kind: str, meta: dict | None = None,
+                 arrays=None) -> None:
+        """Write-ahead hook: make the mutation durable *before* applying.
+
+        Called by every mutation method after validation but before any
+        state changes; the manager fsyncs the record stamped with the
+        epoch the mutation is about to publish.  No-op on a volatile
+        engine and during recovery replay (replay re-drives the mutation
+        API from the log — logging it again would double every record).
+        """
+        d = self._durability
+        if d is not None and not d.replaying:
+            d.log_mutation(self, kind, meta, arrays)
+
+    def _wal_publish(self) -> None:
+        """Post-publish hook: let the durability tier weigh a checkpoint
+        (cost-model trigger — replay debt vs state write)."""
+        d = self._durability
+        if d is not None and not d.replaying:
+            d.on_publish(self)
+
+    def persist(self, root: str, **kw) -> "object":
+        """Start durability for this engine at a fresh ``root``.
+
+        Writes a genesis checkpoint of the current epoch, opens the WAL,
+        and attaches the manager: from here every mutation batch is
+        logged-and-fsynced before its epoch publishes, and checkpoints
+        are taken on the cost-model trigger.  Recover later with
+        ``SSBEngine.open(root)``.  Keyword args pass through to
+        ``DurabilityManager`` (``fs``, ``keep``, ``min_log_bytes``,
+        ``safety``, ``auto_checkpoint``).
+        """
+        from repro.durability.manager import DurabilityManager
+
+        return DurabilityManager.create(root, self, **kw)
+
+    @classmethod
+    def open(cls, root: str, **kw) -> "SSBEngine":
+        """Recover an engine from a durability root (DESIGN.md §10).
+
+        Restores the newest checkpoint whose leaves verify (falling back
+        to older steps on corruption), truncates the WAL's torn tail,
+        replays the log suffix through the normal mutation API, and
+        returns the engine with the log open for new mutations.
+        """
+        from repro.durability.manager import open_engine
+
+        return open_engine(root, **kw)
+
+    @property
+    def durability(self):
+        """The attached DurabilityManager, or None (volatile engine)."""
+        return self._durability
+
+    def close(self) -> None:
+        """Detach and close the durability tier (flushes the WAL handle).
+
+        Idempotent; a closed engine keeps serving queries and accepts
+        further mutations as a volatile engine."""
+        if self._durability is not None:
+            self._durability.close()
+            self._durability = None
+
     # -- §3.2.3 update commands (invalidate the affected dim's probes) -----
     def _replace_table(self, dim: str, table) -> None:
+        if self._durability is not None:
+            raise RuntimeError(
+                "entry_update/index_update/table_update are raw §3.2.3 "
+                "cell writes outside the WAL mandate — a durable engine "
+                "would silently lose them on recovery; use ingest / "
+                "append_rows, or close() durability first")
         self.indexes[dim] = dataclasses.replace(self.indexes[dim],
                                                 table=table)
         # the functional update minted fresh table buffers: new generation
@@ -648,7 +758,8 @@ class SSBEngine(_QueryRunner):
 
     # -- streaming ingest: delta buffer + cost-model-driven compaction -----
     def ingest(self, dim: str, keys, payloads=None, *, op: str = "upsert",
-               auto_compact: bool = True) -> CompactionPlan:
+               auto_compact: bool = True,
+               _wal: bool = True) -> CompactionPlan:
         """Absorb a batch of index ops into ``dim``'s delta buffer.
 
         ``keys`` are raw dimension keys; ``op`` is "insert" / "upsert"
@@ -657,15 +768,41 @@ class SSBEngine(_QueryRunner):
         planner: when the modeled delta-overlay tax or occupancy says so
         (and ``auto_compact``), the delta folds into the main table.
         Returns the compaction decision either way.
+
+        Batches are validated at this boundary (1-D integer arrays,
+        int32-range values, matching lengths) and rejected with a
+        ``ValueError`` naming the argument.  ``_wal`` is internal: it
+        suppresses this batch's own WAL record when the caller
+        (``append_rows``) already logged a composite record covering it.
         """
         if self.mode != "jspim":
             raise ValueError("ingest requires jspim mode (no index to "
                              f"maintain in mode={self.mode!r})")
-        if np.asarray(keys).shape[0] == 0:
+        if dim not in self.indexes:
+            raise ValueError(f"dim: unknown dimension {dim!r} (have "
+                             f"{sorted(self.indexes)})")
+        if op not in ("insert", "upsert", "delete"):
+            raise ValueError(f"op: expected insert/upsert/delete, "
+                             f"got {op!r}")
+        keys = _check_batch_col("keys", keys)
+        if op == "delete":
+            payloads = None
+        else:
+            if payloads is None:
+                raise ValueError(f"payloads: required for op={op!r} "
+                                 "(the new dimension-row indices)")
+            payloads = _check_batch_col("payloads", payloads,
+                                        expect_len=keys.shape[0])
+        if keys.shape[0] == 0:
             # strict no-op (mirror of the empty-append fix): zero ops can
             # change no state, so publishing an epoch, dropping probes,
             # re-planning, or minting an empty delta would be pure loss
             return self.compaction_plan(dim)
+        if _wal:
+            arrays = {"keys": keys}
+            if payloads is not None:
+                arrays["payloads"] = payloads
+            self._wal_log("ingest", {"dim": dim, "op": op}, arrays)
         before = self.indexes[dim].delta
         self.indexes[dim] = ingest_index(self.indexes[dim], keys, payloads,
                                          op=op)
@@ -687,32 +824,53 @@ class SSBEngine(_QueryRunner):
         plan = self.compaction_plan(dim)
         if auto_compact and plan.compact:
             self.compact(dim)
+        if _wal:
+            self._wal_publish()
         return plan
 
-    def append_rows(self, dim: str, rows) -> None:
+    def append_rows(self, dim: str, rows, *,
+                    auto_compact: bool = True) -> None:
         """Append new rows to a dimension table and index them.
 
         ``rows`` maps every column of ``dim`` to a 1-D array of new
-        values.  The dimension table grows in place; in jspim mode the new
-        PK -> row-index mappings stream into the delta buffer (no index
-        rebuild), and in every mode the dimension's cached probes drop.
+        values (validated here: integer, 1-D, equal lengths — a bad
+        column raises ``ValueError`` naming it).  The dimension table
+        grows in place; in jspim mode the new PK -> row-index mappings
+        stream into the delta buffer (no index rebuild), and in every
+        mode the dimension's cached probes drop.  A zero-row append is a
+        strict no-op.  ``auto_compact`` passes through to the internal
+        ``ingest`` (recovery replays with it off so logged ``compact``
+        records reproduce the original fold points).
         """
+        if dim not in DIM_PK:
+            raise ValueError(f"dim: unknown dimension {dim!r} (have "
+                             f"{sorted(DIM_PK)})")
         t = self.tables[dim]
         missing = set(t.names()) ^ set(rows)
         if missing:
             raise ValueError(f"append_rows({dim!r}) column mismatch: "
                              f"{sorted(missing)}")
-        new_cols = {k: jnp.asarray(rows[k], jnp.int32) for k in t.names()}
-        n_new = next(iter(new_cols.values())).shape[0]
+        cols_np: dict[str, np.ndarray] = {}
+        n_new: int | None = None
+        for k in t.names():
+            cols_np[k] = _check_batch_col(f"rows[{k!r}]", rows[k],
+                                          expect_len=n_new)
+            if n_new is None:
+                n_new = cols_np[k].shape[0]
+        if n_new == 0:
+            return
+        self._wal_log("append_rows", {"dim": dim}, cols_np)
         n0 = t.n_rows
-        self.tables[dim] = t.append(new_cols)
+        self.tables[dim] = t.append(
+            {k: jnp.asarray(v) for k, v in cols_np.items()})
         if self.mode == "jspim":
-            self.ingest(dim, new_cols[DIM_PK[dim]],
+            self.ingest(dim, cols_np[DIM_PK[dim]],
                         np.arange(n0, n0 + n_new, dtype=np.int32),
-                        op="insert")
+                        op="insert", auto_compact=auto_compact, _wal=False)
         else:
             self._epoch += 1
             self.invalidate_probe_cache(dim)
+        self._wal_publish()
 
     # -- fact-side streaming append: probe-cache tail extension ------------
     def append_fact_rows(self, rows, *, extend_cache: bool = True) -> dict:
@@ -752,16 +910,20 @@ class SSBEngine(_QueryRunner):
             raise ValueError(f"append_fact_rows column mismatch: "
                              f"{sorted(missing)}")
         # host-side staging: padding happens in numpy (table.pad_batch),
-        # so ragged batch sizes reach every jitted program bucket-shaped
-        new_cols = {k: np.asarray(rows[k], np.int32)
-                    for k in fact.names()}
-        lens = {k: v.shape[0] for k, v in new_cols.items()}
-        if len(set(lens.values())) != 1:
-            raise ValueError(f"ragged fact append: {lens}")
-        n_new = next(iter(lens.values()))
+        # so ragged batch sizes reach every jitted program bucket-shaped;
+        # validation at this boundary names the bad column (and is what
+        # lets WAL replay trust recorded batches)
+        new_cols: dict[str, np.ndarray] = {}
+        n_new: int | None = None
+        for k in fact.names():
+            new_cols[k] = _check_batch_col(f"rows[{k!r}]", rows[k],
+                                           expect_len=n_new)
+            if n_new is None:
+                n_new = new_cols[k].shape[0]
         if n_new == 0:  # strict no-op: nothing moved, nothing invalidates
             return {"appended": 0, "epoch": self._fact_epoch, "dims": {},
                     "capacity_grew": False, "skew_replanned": []}
+        self._wal_log("append_fact_rows", {}, new_cols)
         n0 = fact.n_rows
         pad_values = {FACT_FK[d]: int(_ht.EMPTY_KEY) for d in FACT_FK}
         # one bucket for both write windows (table tail AND cache splice)
@@ -790,6 +952,7 @@ class SSBEngine(_QueryRunner):
         if self.mode != "jspim":  # no index: probes must rerun from cold
             self.invalidate_probe_cache()
             report["skew_replanned"] = []
+            self._wal_publish()
             return report
         start = jnp.int32(n0)
         for dim in sorted(self._probe_cache):
@@ -832,6 +995,7 @@ class SSBEngine(_QueryRunner):
             self._tail_extensions += 1
             report["dims"][dim] = "extended"
         report["skew_replanned"] = self._maybe_replan_fact_skew()
+        self._wal_publish()
         return report
 
     def _fact_append_plan(self, dim: str, n_tail: int,
@@ -964,6 +1128,11 @@ class SSBEngine(_QueryRunner):
         idx = self.indexes[dim]
         if delta_is_empty(idx.delta):
             return
+        # logged like every other mutation batch (after the empty check:
+        # an empty compact publishes nothing, so it must log nothing) so
+        # recovery replays the exact live fold points — auto-compactions
+        # included, since they arrive here too
+        self._wal_log("compact", {"dim": dim})
         pinned = self._index_pinned(dim)
         if pinned:
             self._pin_copies += 1
@@ -978,6 +1147,7 @@ class SSBEngine(_QueryRunner):
         # full programs (they close over the old plans statically)
         self._plan_dim(dim)
         self._full_programs.clear()
+        self._wal_publish()
 
     def ingest_info(self) -> dict:
         """Ingest/compaction counters + per-dim delta occupancy."""

@@ -145,3 +145,26 @@ def test_rank_scaling_sublinear():
          for r in (1, 2, 4, 8, 16)]
     assert all(a >= b for a, b in zip(t, t[1:]))  # monotone improvement
     assert t[3] / t[4] < 1.5   # saturates at the channel-bandwidth bound
+
+
+# -- durability-tier host costs (DESIGN.md §10) -------------------------------
+
+def test_checkpoint_write_seconds_floor_and_scaling():
+    from repro.core.costmodel import (CKPT_SAVE_FLOOR_S,
+                                      checkpoint_write_seconds)
+    assert checkpoint_write_seconds(0) == pytest.approx(CKPT_SAVE_FLOOR_S)
+    small, big = (checkpoint_write_seconds(1 << 20),
+                  checkpoint_write_seconds(1 << 30))
+    assert CKPT_SAVE_FLOOR_S < small < big
+
+
+def test_wal_replay_seconds_monotone_and_backend_ordered():
+    from repro.core.costmodel import wal_replay_seconds
+    a = wal_replay_seconds(1 << 20, n_records=10, backend="cpu")
+    b = wal_replay_seconds(1 << 24, n_records=10, backend="cpu")
+    c = wal_replay_seconds(1 << 24, n_records=1000, backend="cpu")
+    assert 0 < a < b < c
+    # replay is dispatch-dominated on CPU: records, not bytes, drive it
+    per_rec = wal_replay_seconds(0, n_records=1, backend="cpu")
+    assert per_rec > wal_replay_seconds(1 << 16, n_records=0, backend="cpu")
+    assert wal_replay_seconds(1 << 24, n_records=100, backend="tpu") < c

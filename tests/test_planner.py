@@ -196,3 +196,42 @@ def test_hot_hit_count_exact():
 def test_schedule_plan_defaults():
     p = SchedulePlan(schedule="gathered")
     assert p.hot_entries == 0 and not p.full_map
+
+
+# -- checkpoint trigger (durability tier, DESIGN.md §10) ----------------------
+
+def test_plan_checkpoint_defers_small_logs():
+    from repro.core import plan_checkpoint
+    from repro.core.planner import CKPT_MIN_LOG_BYTES
+    p = plan_checkpoint(log_bytes=CKPT_MIN_LOG_BYTES - 1, n_records=3,
+                        state_bytes=1 << 20)
+    assert not p.checkpoint and p.reason == "log_small"
+
+
+def test_plan_checkpoint_fires_on_replay_debt():
+    from repro.core import plan_checkpoint
+    # dispatch-dominated CPU replay: a few hundred records dwarf the
+    # write cost of a small state snapshot
+    p = plan_checkpoint(log_bytes=1 << 20, n_records=500,
+                        state_bytes=1 << 20, backend="cpu")
+    assert p.checkpoint and p.reason == "replay_debt"
+    assert p.est_replay_s > p.est_write_s
+
+
+def test_plan_checkpoint_defers_when_write_dominates():
+    from repro.core import plan_checkpoint
+    # huge state, tiny log suffix: rewriting the snapshot costs more
+    # than replaying the records it would save
+    p = plan_checkpoint(log_bytes=1 << 17, n_records=1,
+                        state_bytes=200 << 30, backend="tpu")
+    assert not p.checkpoint and p.reason == "write_dominates"
+
+
+def test_plan_checkpoint_monotone_in_log_bytes():
+    from repro.core import plan_checkpoint
+    decisions = [plan_checkpoint(log_bytes=b, n_records=b // 1024,
+                                 state_bytes=64 << 20, backend="cpu").checkpoint
+                 for b in (1 << 14, 1 << 20, 1 << 26, 1 << 30)]
+    # once the replay debt crosses the threshold it never uncrosses
+    assert decisions == sorted(decisions)
+    assert decisions[-1]
