@@ -494,6 +494,38 @@ def wal_replay_seconds(log_bytes: int, n_records: int = 0,
     return ns * 1e-9
 
 
+# --------------------------------------------------------------------------
+# Serving pricing: batched query dispatch (planner input,
+# core/planner.py:plan_batch — DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+# Elementwise passes per request in the vmapped filter→mask→measure→
+# segment-sum query tail: dimension-filter gathers, fact predicates, the
+# measure, and the segment sum — each one stream pass over the fact rows,
+# replicated per batched parameter vector (vmap adds a batch dim; it does
+# not share the masking work between requests).
+SERVE_PASSES_PER_REQUEST = 6.0
+# Fused-op dispatches per batched serve: the compiled batch program plus
+# host-side result distribution.
+SERVE_OPS_PER_DISPATCH = 2
+
+
+def batch_serve_seconds(batch: int, n_rows: int,
+                        backend: str = "cpu") -> float:
+    """Modeled wall seconds of one batched query dispatch.
+
+    ``batch`` parameter vectors of one query id execute as a single
+    compiled vmap over an ``n_rows`` fact stream: per-request stream work
+    scales linearly with the batch while the fixed dispatch overhead is
+    paid once — the amortization ``plan_batch`` trades against deadline
+    slack.
+    """
+    c = HOST_COSTS.get(backend, HOST_COSTS["cpu"])
+    ns = (max(1, batch) * max(1, n_rows) * SERVE_PASSES_PER_REQUEST
+          * c.pass_ns + SERVE_OPS_PER_DISPATCH * c.op_ns)
+    return ns * 1e-9
+
+
 def data_overhead_bytes(n_fact: int, n_dim: int, dup_total: int,
                         cfg: PIMConfig = PIMConfig()) -> dict:
     """§4.2.1 accounting: dictionary + encoded fact copy + hash table + dup list."""

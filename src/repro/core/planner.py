@@ -354,6 +354,54 @@ def plan_checkpoint(*, log_bytes: int, n_records: int, state_bytes: int,
     return CheckpointPlan(False, "write_dominates", replay, write)
 
 
+# ---------------------------------------------------------------------------
+# Serving planning: how many compatible requests ride one batched dispatch?
+# ---------------------------------------------------------------------------
+
+# Keep this multiple of the modeled dispatch time in deadline slack: the
+# model is coarse and a missed deadline is an explicit per-request failure
+# — never a risk worth batching for.
+BATCH_SLACK_FACTOR = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """Hashable batch-size decision for one serving dispatch."""
+
+    size: int            # requests to fold into this dispatch
+    reason: str          # "depth" | "deadline"
+    est_batch_s: float   # modeled wall time of the chosen dispatch
+    est_single_s: float  # modeled wall time of a size-1 dispatch
+
+
+def plan_batch(*, queue_depth: int, slack_s: float | None, n_rows: int,
+               max_batch: int, backend: str = "cpu") -> BatchPlan:
+    """Batch-size vs deadline pricing for one serving dispatch
+    (DESIGN.md §11).
+
+    Bigger batches amortize the fixed dispatch overhead across requests
+    (the vmap win), but every rider lands no earlier than the whole
+    dispatch: the batch is capped so the modeled dispatch time stays
+    within the tightest member's remaining deadline slack, with a
+    ``BATCH_SLACK_FACTOR`` safety margin.  ``slack_s=None`` means no
+    deadline in the batch — depth and ``max_batch`` alone decide.
+    """
+    size = max(1, min(queue_depth, max_batch))
+    reason = "depth"
+    if slack_s is not None:
+        while size > 1 and costmodel.batch_serve_seconds(
+                size, n_rows, backend=backend) * BATCH_SLACK_FACTOR \
+                > slack_s:
+            size //= 2
+            reason = "deadline"
+    return BatchPlan(
+        size=size, reason=reason,
+        est_batch_s=costmodel.batch_serve_seconds(size, n_rows,
+                                                  backend=backend),
+        est_single_s=costmodel.batch_serve_seconds(1, n_rows,
+                                                   backend=backend))
+
+
 def skew_drift(old: SkewStats, new: SkewStats) -> float:
     """How far the fact-side top-share curve moved (re-plan trigger input).
 

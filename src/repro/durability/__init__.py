@@ -4,7 +4,10 @@ DESIGN.md §10.  Entry points: ``SSBEngine.persist(root)`` to start
 logging, ``SSBEngine.open(root)`` to recover; the classes here are the
 machinery behind them (and the crash-injection surface for tests).
 """
-from repro.durability.fsio import CrashPoint, FailpointFS, OsFS
+from repro.durability.faults import (NULL_FAULTS, CrashPoint, FaultRegistry,
+                                     OpSchedule, SiteProxy, boom_on,
+                                     checkpoint_crash_sites)
+from repro.durability.fsio import FailpointFS, OsFS
 from repro.durability.manager import (DurabilityManager, RecoveryError,
                                       apply_record, open_engine)
 from repro.durability.state import (build_engine_from_state, engine_state,
@@ -13,7 +16,9 @@ from repro.durability.wal import (KINDS, SEMANTIC_KINDS, WALError,
                                   WALRecord, WriteAheadLog, read_records,
                                   scan)
 
-__all__ = ["CrashPoint", "FailpointFS", "OsFS", "DurabilityManager",
+__all__ = ["CrashPoint", "FailpointFS", "OsFS", "FaultRegistry",
+           "NULL_FAULTS", "OpSchedule", "SiteProxy", "boom_on",
+           "checkpoint_crash_sites", "DurabilityManager",
            "RecoveryError", "apply_record", "open_engine",
            "build_engine_from_state", "engine_state", "state_nbytes",
            "KINDS", "SEMANTIC_KINDS", "WALError", "WALRecord",

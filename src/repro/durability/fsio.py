@@ -27,9 +27,9 @@ from __future__ import annotations
 
 import os
 
+from repro.durability.faults import CrashPoint, OpSchedule
 
-class CrashPoint(RuntimeError):
-    """Simulated process kill raised by an armed :class:`FailpointFS`."""
+__all__ = ["CrashPoint", "OsFS", "FailpointFS"]
 
 
 class _OsAppendFile:
@@ -124,45 +124,34 @@ class FailpointFS:
         self.rng = rng
         self.durable: dict[str, bytes] = {}
         self.unsynced: dict[str, bytearray] = {}
-        self.op = 0
-        self.crash_at: int | None = None
-        self.mode = "after"
-        self.site: str | None = None
-        self._site_seen = 0
-        self.crashed_at: tuple[int, str, str] | None = None
+        self.sched = OpSchedule()
 
-    # -- kill schedule -----------------------------------------------------
+    # -- kill schedule (delegated to the shared OpSchedule) ----------------
+    @property
+    def op(self) -> int:
+        return self.sched.op
+
+    @property
+    def mode(self) -> str:
+        return self.sched.mode
+
+    @property
+    def crashed_at(self) -> tuple[int, str, str] | None:
+        return self.sched.crashed_at
+
     def arm(self, crash_at: int, mode: str = "after",
             site: str | None = None) -> None:
         """Kill at op ``crash_at``; with ``site`` the count is over ops
         whose site name starts with it (e.g. ``"ckpt_"`` aims the kill at
         the checkpoint writer's syscalls regardless of how many WAL ops
         precede them)."""
-        assert mode in ("before", "partial", "after"), mode
-        self.crash_at = int(crash_at)
-        self.mode = mode
-        self.site = site
-        self._site_seen = 0
+        self.sched.arm(crash_at, mode, site)
 
     def disarm(self) -> None:
-        self.crash_at = None
-        self.site = None
+        self.sched.disarm()
 
     def _tick(self, site: str) -> bool:
-        """Advance the op counter; True when this op is the kill."""
-        n = self.op
-        self.op += 1
-        if self.crash_at is None:
-            return False
-        if self.site is not None:
-            if not site.startswith(self.site):
-                return False
-            n = self._site_seen
-            self._site_seen += 1
-        if n == self.crash_at:
-            self.crashed_at = (n, site, self.mode)
-            return True
-        return False
+        return self.sched.tick(site)
 
     def _crash(self, site: str):
         # kernel writeback: any prefix of each unsynced tail may be on

@@ -118,6 +118,11 @@ class DurabilityManager:
         Stamped with ``engine.epoch + 1`` — the epoch this mutation will
         publish; returns only after the record is fsynced.
         """
+        if self.wal is None:
+            raise RuntimeError(
+                "durability manager is closed: the WAL handle is gone, so "
+                "this mutation could not be made durable — reopen the "
+                "root with SSBEngine.open before mutating")
         n = self.wal.append(kind, engine.epoch + 1, meta, arrays)
         self.records_logged += 1
         self.bytes_logged += n

@@ -62,6 +62,8 @@ Execution pipeline (DESIGN.md §4):
 from __future__ import annotations
 
 import dataclasses
+import functools
+import threading
 import weakref
 from functools import partial
 from typing import Callable
@@ -410,6 +412,24 @@ class _QueryRunner:
         return out
 
 
+def _mutates(fn):
+    """Mutation-method guard: engine lock + closed check.
+
+    Serialized under the engine's reentrant lock so a serving tier's
+    snapshot refresh / background compaction publish can never observe a
+    torn mutation; reentrant because mutations compose (``append_rows``
+    drives ``ingest``, ``ingest`` may drive ``compact``).  The closed
+    check makes post-``close()`` mutations a clear ``RuntimeError``
+    instead of a write to a closed WAL handle.
+    """
+    @functools.wraps(fn)
+    def wrapper(self, *a, **k):
+        with self._mu:
+            self._check_open()
+            return fn(self, *a, **k)
+    return wrapper
+
+
 class SSBEngine(_QueryRunner):
     """Executes SSB queries with joins delegated to the selected engine.
 
@@ -433,6 +453,11 @@ class SSBEngine(_QueryRunner):
         # durability tier (DESIGN.md §10): attached by
         # DurabilityManager.create / SSBEngine.open; None = volatile engine
         self._durability = None
+        # serving-tier contract (DESIGN.md §11): mutations serialize under
+        # one reentrant lock (queries and snapshots stay lock-free), and a
+        # closed engine refuses them with a clear error
+        self._mu = threading.RLock()
+        self._closed = False
         if mode == "jspim":
             if indexes is not None:
                 # durability restore path: adopt the checkpointed index
@@ -619,9 +644,10 @@ class SSBEngine(_QueryRunner):
         """
         from repro.engine.snapshot import EpochSnapshot
 
-        snap = EpochSnapshot(self)
-        self._snapshots.add(snap)
-        self._snapshots_taken += 1
+        with self._mu:  # freeze can't interleave with a mutation
+            snap = EpochSnapshot(self)
+            self._snapshots.add(snap)
+            self._snapshots_taken += 1
         return snap
 
     def _live_snapshots(self) -> list:
@@ -708,13 +734,33 @@ class SSBEngine(_QueryRunner):
         return self._durability
 
     def close(self) -> None:
-        """Detach and close the durability tier (flushes the WAL handle).
+        """Close the engine: detach durability and refuse further mutations.
 
-        Idempotent; a closed engine keeps serving queries and accepts
-        further mutations as a volatile engine."""
-        if self._durability is not None:
-            self._durability.close()
-            self._durability = None
+        Idempotent.  A closed engine (and its live snapshots) keeps
+        serving queries — a serving tier drains in-flight reads during
+        shutdown/recovery — but every mutation raises a clear
+        ``RuntimeError``.  (Previously a closed durable engine silently
+        reverted to volatile: a post-close ``ingest`` either vanished
+        from the durable image or died deep in the manager on the closed
+        WAL handle.)"""
+        with self._mu:
+            if self._closed:
+                return
+            self._closed = True
+            if self._durability is not None:
+                self._durability.close()
+                self._durability = None
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError(
+                "engine is closed: mutations are refused (queries and "
+                "held snapshots keep working; reopen the durability root "
+                "with SSBEngine.open, or build a new engine, to mutate)")
 
     # -- §3.2.3 update commands (invalidate the affected dim's probes) -----
     def _replace_table(self, dim: str, table) -> None:
@@ -732,6 +778,7 @@ class SSBEngine(_QueryRunner):
         self._epoch += 1
         self.invalidate_probe_cache(dim)
 
+    @_mutates
     def entry_update(self, dim: str, bucket, slot, key, value_word) -> None:
         """Entry Update: overwrite one (bucket, slot) cell of ``dim``.
 
@@ -740,6 +787,7 @@ class SSBEngine(_QueryRunner):
         self._replace_table(dim, _ht.entry_update(
             self.indexes[dim].table, bucket, slot, key, value_word))
 
+    @_mutates
     def index_update(self, dim: str, key, new_payload) -> None:
         """Index Update: search raw ``key`` in ``dim``; update its payload.
 
@@ -750,6 +798,7 @@ class SSBEngine(_QueryRunner):
         self._replace_table(dim, _ht.index_update(
             self.indexes[dim].table, code, new_payload))
 
+    @_mutates
     def table_update(self, dim: str, bucket_ids, new_keys,
                      new_values) -> None:
         """Table Update: burst-write whole buckets of ``dim``."""
@@ -757,6 +806,7 @@ class SSBEngine(_QueryRunner):
             self.indexes[dim].table, bucket_ids, new_keys, new_values))
 
     # -- streaming ingest: delta buffer + cost-model-driven compaction -----
+    @_mutates
     def ingest(self, dim: str, keys, payloads=None, *, op: str = "upsert",
                auto_compact: bool = True,
                _wal: bool = True) -> CompactionPlan:
@@ -828,6 +878,7 @@ class SSBEngine(_QueryRunner):
             self._wal_publish()
         return plan
 
+    @_mutates
     def append_rows(self, dim: str, rows, *,
                     auto_compact: bool = True) -> None:
         """Append new rows to a dimension table and index them.
@@ -873,6 +924,7 @@ class SSBEngine(_QueryRunner):
         self._wal_publish()
 
     # -- fact-side streaming append: probe-cache tail extension ------------
+    @_mutates
     def append_fact_rows(self, rows, *, extend_cache: bool = True) -> dict:
         """Append new lineorder rows; extend cached probes over the tail.
 
@@ -1110,6 +1162,7 @@ class SSBEngine(_QueryRunner):
             backend=jax.default_backend(),
             pinned=self._index_pinned(dim))
 
+    @_mutates
     def compact(self, dim: str) -> None:
         """Fold ``dim``'s delta into its main table and re-plan probes.
 
@@ -1148,6 +1201,56 @@ class SSBEngine(_QueryRunner):
         self._plan_dim(dim)
         self._full_programs.clear()
         self._wal_publish()
+
+    # -- background compaction (off the serving path, DESIGN.md §11) -------
+    def prepare_compact(self, dim: str):
+        """Stage ``dim``'s delta merge without blocking queries or ingest.
+
+        Runs ``compact_index``'s **swap** flavor (fresh buffer pair; the
+        live table, every snapshot, and every cached probe stay
+        untouched) with the engine lock released during the heavy merge,
+        so a background worker can do the folding while the serving path
+        keeps answering.  Returns an opaque staging token for
+        :meth:`publish_compact`, or ``None`` when there is nothing to
+        fold.
+        """
+        with self._mu:
+            self._check_open()
+            if dim not in self.indexes:
+                raise ValueError(f"dim: unknown dimension {dim!r} (have "
+                                 f"{sorted(self.indexes)})")
+            idx = self.indexes[dim]
+        if delta_is_empty(idx.delta):
+            return None
+        # off-lock: O(delta) merge against an immutable index image
+        return (dim, idx, compact_index(idx, donate=False))
+
+    def publish_compact(self, prepared) -> bool:
+        """Publish a staged merge like any other epoch (atomic swap).
+
+        Returns ``False`` (merge discarded, state untouched) when a
+        mutation landed on the dimension after ``prepare_compact`` read
+        it — the delta the merge folded is no longer the live delta, so
+        publishing would lose the newer ops.  The caller (the serving
+        tier's maintenance loop) simply re-stages.
+        """
+        if prepared is None:
+            return False
+        dim, source, merged = prepared
+        with self._mu:
+            self._check_open()
+            if self.indexes[dim] is not source:
+                return False
+            self._wal_log("compact", {"dim": dim})
+            self.indexes[dim] = merged
+            self._index_gens[dim] = self._index_gens.get(dim, 0) + 1
+            self._epoch += 1
+            self._compactions += 1
+            self.invalidate_probe_cache(dim)
+            self._plan_dim(dim)
+            self._full_programs.clear()
+            self._wal_publish()
+            return True
 
     def ingest_info(self) -> dict:
         """Ingest/compaction counters + per-dim delta occupancy."""

@@ -113,6 +113,17 @@ class EpochSnapshot(_QueryRunner):
         self._probe_cache = {}
         self._full_programs = {}
 
+    def epoch_lag(self) -> int:
+        """How many epochs the head engine has advanced past this image.
+
+        0 ⟺ this snapshot is fresh.  The serving tier reports this per
+        response as the staleness measure (DESIGN.md §11): a scheduler
+        in degraded mode keeps answering from its last pinned snapshot
+        and clients see exactly how stale the answer is.
+        """
+        self._check_live()
+        return max(0, self.engine.epoch - self.epoch)
+
     def __enter__(self) -> "EpochSnapshot":
         return self
 

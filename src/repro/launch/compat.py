@@ -84,3 +84,26 @@ def activate(mesh: jax.sharding.Mesh):
     cm = set_mesh(mesh)
     with cm:
         yield mesh
+
+
+def check_shard_map_drift() -> str:
+    """Assert one of the two shard_map surfaces this module bridges exists.
+
+    CI runs this against the latest jax so an upstream removal of *both*
+    ``jax.shard_map`` and ``jax.experimental.shard_map`` (the legacy name
+    is already deprecated) fails loudly at the version-drift step instead
+    of surfacing as a confusing ImportError deep inside a kernel launch.
+    Returns which surface was found, for the CI log.
+    """
+    if hasattr(jax, "shard_map"):
+        return "jax.shard_map"
+    try:
+        from jax.experimental.shard_map import shard_map as _sm  # noqa: F401
+        return "jax.experimental.shard_map"
+    except ImportError:
+        pass
+    raise RuntimeError(
+        "jax version drift: neither jax.shard_map nor "
+        f"jax.experimental.shard_map exists on jax {jax.__version__}; "
+        "repro.launch.compat.shard_map has no surface to bridge — "
+        "update the compat layer before bumping the pinned jax")

@@ -1,0 +1,15 @@
+"""Resilient multi-client serving over epoch snapshots (DESIGN.md §11)."""
+from repro.serving.batch import BatchRunner
+from repro.serving.oracle import LogicalModel, NumpyTable
+from repro.serving.params import PARAM_QUERIES, ParamQuery
+from repro.serving.scheduler import (FAILED, OK, REJECTED, TIMED_OUT,
+                                     QueryScheduler, Response, ServeConfig,
+                                     Ticket)
+from repro.serving.workers import Worker, WorkerCrash, WorkerPool
+
+__all__ = [
+    "BatchRunner", "LogicalModel", "NumpyTable", "PARAM_QUERIES",
+    "ParamQuery", "QueryScheduler", "Response", "ServeConfig", "Ticket",
+    "Worker", "WorkerCrash", "WorkerPool",
+    "OK", "REJECTED", "TIMED_OUT", "FAILED",
+]

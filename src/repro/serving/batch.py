@@ -1,0 +1,129 @@
+"""Batched dispatch: many parameter vectors through one compiled program.
+
+The fused path vmaps the engine's shared ``_filter_aggregate`` tail over a
+``(B, P)`` int32 parameter array — the fact/dim columns and cached probes
+are closed over as non-mapped operands, so a batch of B compatible
+requests costs one dispatch instead of B.  Batch width is bucketed to
+powers of two (replicating the last row) so the number of distinct traces
+per query id is logarithmic in the largest batch ever served.
+
+The composed path is the degraded flavor the circuit breaker falls back
+to: one request at a time through a plain (non-vmapped) jit of the same
+tail.  It is deliberately a *different* compiled program — a poisoned
+fused kernel (the chaos harness injects faults per code path) must not be
+re-entered by its own fallback.
+
+Both paths read only :class:`~repro.engine.queries._QueryRunner` surface
+(``probe_dim`` / ``tables``), so a :class:`~repro.engine.snapshot.
+EpochSnapshot` serves batches exactly like the head engine would.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.durability.faults import NULL_FAULTS
+from repro.engine.queries import SSB_QUERIES, _filter_aggregate
+from repro.serving.params import PARAM_QUERIES
+
+
+def _bucket(n: int) -> int:
+    """Smallest power of two ≥ n (trace-count bound per query id)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class BatchRunner:
+    """Per-query-id compiled programs over a ``_QueryRunner``'s state.
+
+    Programs are keyed by query id only — parameters are *operands*, so
+    refreshing to a newer snapshot reuses every compiled program (shapes
+    and plans are unchanged; the epoch is never a jit key).
+    """
+
+    def __init__(self):
+        self._batch_programs: dict[str, object] = {}
+        self._single_programs: dict[str, object] = {}
+
+    # -- compiled programs -------------------------------------------------
+    def _batch_program(self, name: str):
+        prog = self._batch_programs.get(name)
+        if prog is None:
+            pq = PARAM_QUERIES[name]
+
+            def program(fact_cols, dim_cols, probes, params):
+                def one(p):
+                    return _filter_aggregate(pq.bind(p), fact_cols,
+                                             dim_cols, probes)
+                return jax.vmap(one)(params)
+
+            prog = jax.jit(program)
+            self._batch_programs[name] = prog
+        return prog
+
+    def _single_program(self, name: str):
+        prog = self._single_programs.get(name)
+        if prog is None:
+            pq = PARAM_QUERIES[name]
+
+            def program(fact_cols, dim_cols, probes, p):
+                return _filter_aggregate(pq.bind(p), fact_cols,
+                                         dim_cols, probes)
+
+            prog = jax.jit(program)
+            self._single_programs[name] = prog
+        return prog
+
+    # -- inputs ------------------------------------------------------------
+    @staticmethod
+    def _operands(runner, name: str):
+        spec = SSB_QUERIES[name]
+        fact_cols = dict(runner.tables["lineorder"].columns)
+        dim_cols = {d: dict(runner.tables[d].columns)
+                    for d in spec.joined_dims()}
+        probes = {d: runner.probe_dim(d) for d in spec.joined_dims()}
+        return fact_cols, dim_cols, probes
+
+    # -- execution ---------------------------------------------------------
+    def run_batch(self, runner, name: str, params_list, *,
+                  composed: bool = False, faults=NULL_FAULTS
+                  ) -> list[tuple[int, np.ndarray]]:
+        """Serve ``params_list`` against ``runner``; one (total, groups)
+        per request, as host numpy.
+
+        ``composed=True`` routes through the per-request fallback
+        programs.  ``faults`` sees ``kernel_batch:{name}`` or
+        ``kernel_composed:{name}`` once per dispatch, *before* the kernel
+        runs — an injected crash poisons the whole batch, like a real
+        device fault would.
+        """
+        if not params_list:
+            return []
+        pq = PARAM_QUERIES[name]
+        for p in params_list:
+            if len(p) != pq.n_params:
+                raise ValueError(
+                    f"{name} takes {pq.n_params} params {pq.params}, "
+                    f"got {len(p)}: {tuple(p)!r}")
+        fact_cols, dim_cols, probes = self._operands(runner, name)
+        if composed:
+            prog = self._single_program(name)
+            out = []
+            for p in params_list:
+                faults.hit(f"kernel_composed:{name}")
+                total, groups = prog(fact_cols, dim_cols, probes,
+                                     jnp.asarray(p, jnp.int32))
+                out.append((int(total), np.asarray(groups)))
+            return out
+        b = len(params_list)
+        padded = list(params_list) + [params_list[-1]] * (_bucket(b) - b)
+        params = jnp.asarray(np.asarray(padded, np.int32))
+        faults.hit(f"kernel_batch:{name}")
+        totals, groups = self._batch_program(name)(
+            fact_cols, dim_cols, probes, params)
+        totals = np.asarray(totals)
+        groups = np.asarray(groups)
+        return [(int(totals[i]), groups[i]) for i in range(b)]

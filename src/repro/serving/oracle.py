@@ -1,0 +1,117 @@
+"""Single-threaded numpy oracle for the serving tier's never-wrong gate.
+
+The chaos harness mirrors every engine mutation into a
+:class:`LogicalModel` and freezes one copy per published epoch.  A
+completed response is correct iff it equals the frozen model *at the
+epoch the response reports* — not the head epoch, not the epoch the
+request was submitted at.  Staleness is allowed (and surfaced as
+``epoch_lag``); wrongness is not.
+
+Evaluation reuses the exact query-spec lambdas the compiled programs
+trace — :class:`NumpyTable` stands in for ``Table``, python ints stand in
+for traced scalars — with the engine's int32 wraparound semantics
+(measures summed in int64, cast to int32).  The model is deliberately
+naive: dict-per-column, ``np.add.at`` grouping, O(rows) python-loop
+joins.  Slow and obviously correct is the entire point.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.engine.queries import DIM_PK, FACT_FK, SSB_QUERIES, QuerySpec
+from repro.serving.params import PARAM_QUERIES
+
+
+class NumpyTable:
+    """Numpy stand-in for ``Table`` accepted by the query-spec lambdas."""
+
+    def __init__(self, cols):
+        self._cols = cols
+
+    def __getitem__(self, name):
+        return self._cols[name]
+
+
+class LogicalModel:
+    """The logical relational state a serving epoch is supposed to hold."""
+
+    def __init__(self, tables):
+        self.fact = {k: np.asarray(tables["lineorder"][k]).copy()
+                     for k in tables["lineorder"].names()}
+        self.dims = {d: {k: np.asarray(tables[d][k]).copy()
+                         for k in tables[d].names()} for d in DIM_PK}
+        self.deleted = {d: set() for d in DIM_PK}
+        self.repointed = {d: {} for d in DIM_PK}
+
+    def freeze(self) -> "LogicalModel":
+        out = LogicalModel.__new__(LogicalModel)
+        out.fact = {k: v.copy() for k, v in self.fact.items()}
+        out.dims = {d: {k: v.copy() for k, v in c.items()}
+                    for d, c in self.dims.items()}
+        out.deleted = {d: set(s) for d, s in self.deleted.items()}
+        out.repointed = {d: dict(m) for d, m in self.repointed.items()}
+        return out
+
+    # -- mutation mirrors (chaos driver applies these in lockstep) ---------
+    def append_fact(self, cols) -> None:
+        for k, v in cols.items():
+            self.fact[k] = np.concatenate([self.fact[k], v])
+
+    def append_dim(self, dim: str, cols) -> None:
+        for k, v in cols.items():
+            self.dims[dim][k] = np.concatenate([self.dims[dim][k], v])
+
+    def delete_keys(self, dim: str, keys) -> None:
+        self.deleted[dim].update(int(k) for k in keys)
+
+    def repoint(self, dim: str, key: int, row: int) -> None:
+        self.repointed[dim][int(key)] = int(row)
+
+    # -- evaluation --------------------------------------------------------
+    def key_map(self, dim: str) -> dict:
+        mp = {int(k): i for i, k in enumerate(self.dims[dim][DIM_PK[dim]])}
+        for k in self.deleted[dim]:
+            mp.pop(k, None)
+        mp.update(self.repointed[dim])
+        return mp
+
+    def eval_spec(self, spec: QuerySpec) -> tuple[int, np.ndarray]:
+        n = self.fact["orderkey"].shape[0]
+        mask = np.ones(n, bool)
+        rows = {}
+        for dim in spec.joined_dims():
+            mp = self.key_map(dim)
+            fk = self.fact[FACT_FK[dim]]
+            r = np.fromiter((mp.get(int(k), -1) for k in fk), np.int64, n)
+            rows[dim] = r
+            mask &= r >= 0
+            if dim in spec.dim_filters:
+                dmask = np.asarray(
+                    spec.dim_filters[dim](NumpyTable(self.dims[dim])))
+                mask &= dmask[np.clip(r, 0, dmask.shape[0] - 1)]
+        if spec.fact_filter is not None:
+            mask &= np.asarray(spec.fact_filter(NumpyTable(self.fact)))
+        measure = np.asarray(
+            spec.measure(NumpyTable(self.fact))).astype(np.int64)
+        total = np.int64(measure[mask].sum()).astype(np.int32)
+        if not spec.group_by:
+            return int(total), np.asarray([total], np.int32)
+        gk = np.zeros(n, np.int64)
+        size = 1
+        for dim, col, card in spec.group_by:
+            c = self.dims[dim][col]
+            v = c[np.clip(rows[dim], 0, c.shape[0] - 1)] % card
+            gk = gk * card + v
+            size *= card
+        groups = np.zeros(size, np.int64)
+        np.add.at(groups, gk[mask], measure[mask])
+        return int(total), groups.astype(np.int32)
+
+    def query(self, name: str) -> tuple[int, np.ndarray]:
+        """One canonical (constant-predicate) SSB query."""
+        return self.eval_spec(SSB_QUERIES[name])
+
+    def param_query(self, name: str, p) -> tuple[int, np.ndarray]:
+        """One parameterized query at ``p`` — the serving-path oracle."""
+        return self.eval_spec(
+            PARAM_QUERIES[name].bind(tuple(int(x) for x in p)))

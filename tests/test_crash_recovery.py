@@ -16,7 +16,6 @@ so the oracle never compacts and must still agree bit-for-bit.
 """
 from __future__ import annotations
 
-import contextlib
 import os
 
 import numpy as np
@@ -27,6 +26,9 @@ from repro.checkpoint.manager import (CheckpointCorruptError, latest_step,
 from repro.durability import (SEMANTIC_KINDS, CrashPoint, DurabilityManager,
                               FailpointFS, OsFS, RecoveryError,
                               WriteAheadLog, read_records, scan)
+from repro.durability.faults import boom_on as _boom_on
+from repro.durability.faults import \
+    checkpoint_crash_sites as _checkpoint_crash_sites
 from repro.durability.manager import CKPT_SUBDIR, WAL_NAME
 from repro.durability.wal import MAGIC, WALError, encode_record
 from repro.engine import SSBEngine, generate_ssb
@@ -134,61 +136,8 @@ def _apply(eng, op):
         eng.compact(dim)
 
 
-# ---------------------------------------------------------------------------
-# checkpoint-writer crash sites: proxy the manager module's np/os so leaf
-# writes, fsyncs, and the commit rename report into a crash schedule
-# ---------------------------------------------------------------------------
-
-
-class _SiteProxy:
-    """Module stand-in reporting chosen attributes as crash sites."""
-
-    def __init__(self, real, sites, hook):
-        self._real, self._sites, self._hook = real, sites, hook
-
-    def __getattr__(self, name):
-        attr = getattr(self._real, name)
-        if name in self._sites:
-            hook = self._hook
-
-            def _wrapped(*a, __attr=attr, __name=name, **k):
-                hook(f"ckpt_{__name}")
-                return __attr(*a, **k)
-
-            return _wrapped
-        return attr
-
-
-@contextlib.contextmanager
-def _checkpoint_crash_sites(hook):
-    """Route the checkpoint writer's syscalls through ``hook(site)``.
-
-    ``hook`` runs *before* the real operation — a hook that raises models
-    a kill with that syscall never issued (the tmp dir keeps whatever the
-    prior ops durably wrote)."""
-    import repro.checkpoint.manager as cm
-
-    real_np, real_os = cm.np, cm.os
-    cm.np = _SiteProxy(real_np, {"save"}, hook)
-    cm.os = _SiteProxy(real_os, {"fsync", "replace"}, hook)
-    try:
-        yield
-    finally:
-        cm.np, cm.os = real_np, real_os
-
-
-def _boom_on(site: str, nth: int = 1):
-    """Hook raising :class:`CrashPoint` at the nth occurrence of a site."""
-    seen = {"n": 0}
-
-    def hook(s: str):
-        if s == site:
-            seen["n"] += 1
-            if seen["n"] == nth:
-                raise CrashPoint(f"kill at {s} #{nth}")
-
-    return hook
-
+# checkpoint-writer crash sites now live in repro.durability.faults
+# (imported above as _checkpoint_crash_sites / _boom_on).
 
 # ---------------------------------------------------------------------------
 # WAL record format: framing, torn tails, reopen semantics
@@ -574,7 +523,19 @@ class TestRecovery:
             eng.index_update("supplier", 1, 0)
         eng.close()
         eng.close()                      # idempotent
-        eng.index_update("supplier", 1, 0)  # volatile again: allowed
+        # a closed engine refuses every mutation with a clear error
+        # (previously it silently reverted to volatile — or, for ingest,
+        # died on the closed WAL handle deep inside the manager)
+        for fn in (lambda: eng.index_update("supplier", 1, 0),
+                   lambda: eng.ingest("supplier",
+                                      np.array([1], np.int32),
+                                      np.array([0], np.int32)),
+                   lambda: eng.compact("supplier")):
+            with pytest.raises(RuntimeError, match="closed"):
+                fn()
+        # ...but keeps serving queries
+        total, _ = eng.run("Q1.1")
+        assert int(total) == int(eng.run("Q1.1")[0])
 
     def test_cost_model_trigger_takes_mid_stream_checkpoints(
             self, base_tables, shared_cache, tmp_path):
@@ -622,6 +583,104 @@ class TestRecovery:
         oracle.ingest("supplier", sup[4:8], op="delete")
         _assert_same(_results(rec, ("Q3.1", "Q4.1")),
                      _results(oracle, ("Q3.1", "Q4.1")), "ahead-of-publish")
+        rec.close()
+
+
+# ---------------------------------------------------------------------------
+# recovery under load: old-incarnation snapshots and replay-time readers
+# ---------------------------------------------------------------------------
+
+
+class TestRecoveryUnderLoad:
+    def test_open_while_scheduler_pins_previous_incarnation(
+            self, base_tables, shared_cache, tmp_path):
+        """``SSBEngine.open`` on a root whose previous incarnation still
+        has snapshots pinned by a serving scheduler: recovery neither
+        waits on nor corrupts the old pins — they keep answering their
+        epoch while the recovered engine diverges ahead."""
+        from repro.serving import (PARAM_QUERIES, BatchRunner,
+                                   QueryScheduler, ServeConfig)
+
+        root = str(tmp_path / "d")
+        eng = _engine(base_tables, shared_cache)
+        eng.persist(root)
+        for op in _gen_ops(base_tables, np.random.default_rng(31)):
+            _apply(eng, op)
+        sched = QueryScheduler(eng, ServeConfig())
+        t0 = sched.submit("Q2.1")
+        sched.pump()
+        want = (t0.response.total, np.asarray(t0.response.groups))
+        pinned_epoch = t0.response.epoch
+        eng.close()   # incarnation dies; scheduler's pin survives
+        rec = SSBEngine.open(root)
+        rec._cached_programs = shared_cache
+        assert rec.epoch == eng.epoch
+        # the old pin serves bit-identically while the new incarnation
+        # mutates past it
+        sup = np.asarray(base_tables["supplier"][DIM_PK["supplier"]])
+        rec.ingest("supplier", sup[:6], op="delete")
+        t1 = sched.submit("Q2.1")
+        sched.pump()
+        assert t1.response.status == "ok"
+        assert t1.response.epoch == pinned_epoch
+        assert t1.response.total == want[0]
+        np.testing.assert_array_equal(np.asarray(t1.response.groups),
+                                      want[1])
+        # cut over to the recovered incarnation: lag-free fresh serving
+        sched.rebind(rec)
+        t2 = sched.submit("Q2.1")
+        sched.pump()
+        assert t2.response.epoch == rec.epoch
+        assert not t2.response.stale
+        ref_t, ref_g = rec.run("Q2.1")
+        got_t, got_g = BatchRunner().run_batch(
+            rec, "Q2.1", [PARAM_QUERIES["Q2.1"].defaults])[0]
+        assert t2.response.total == got_t == int(ref_t)
+        sched.close()
+        rec.close()
+
+    def test_wal_replay_races_concurrent_reader(self, base_tables,
+                                                shared_cache, tmp_path):
+        """A reader hammering an old-incarnation snapshot while
+        ``SSBEngine.open`` replays the WAL in another thread: every read
+        during the race is bit-identical to the pre-crash answer (replay
+        builds private state; it can never write into pinned buffers)."""
+        import threading
+
+        root = str(tmp_path / "d")
+        eng = _engine(base_tables, shared_cache)
+        eng.persist(root)
+        for op in _gen_ops(base_tables, np.random.default_rng(37)):
+            _apply(eng, op)
+        snap = eng.snapshot()
+        want = _results(snap, ("Q1.1", "Q3.2"))
+        eng.close()
+
+        diverged = []
+        stop = threading.Event()
+
+        def reader():
+            while not stop.is_set():
+                got = _results(snap, ("Q1.1", "Q3.2"))
+                for name in want:
+                    if (got[name][0] != want[name][0]
+                            or not np.array_equal(got[name][1],
+                                                  want[name][1])):
+                        diverged.append(name)
+                        return
+
+        rt = threading.Thread(target=reader)
+        rt.start()
+        try:
+            rec = SSBEngine.open(root)
+        finally:
+            stop.set()
+            rt.join(timeout=60.0)
+        assert not diverged, f"reader diverged during replay: {diverged}"
+        rec._cached_programs = shared_cache
+        _assert_same(_results(rec, ("Q1.1", "Q3.2")), want,
+                     "post-race recovery")
+        snap.release()
         rec.close()
 
 

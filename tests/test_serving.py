@@ -1,0 +1,430 @@
+"""Functional contract of the serving tier (DESIGN.md §11).
+
+Everything here is deterministic — the scheduler is driven by ``pump()``
+on the test thread with a fake clock where deadlines matter; the chaos /
+concurrency evidence lives in ``test_serving_chaos.py``.  Covered:
+
+* parameterized queries: defaults reproduce the canonical ``SSB_QUERIES``
+  results bit-for-bit; a vmapped batch equals per-request composed
+  execution on random parameters; both paths equal the numpy oracle;
+* admission control: overflow sheds with explicit ``rejected`` +
+  ``retry_after_s``, the queue never exceeds its bound;
+* deadlines: expiry at queue exit and at the batch boundary;
+* fault isolation: a worker crash kills only that worker, the batch
+  retries on a fresh snapshot and still answers correctly;
+* circuit breaker: persistent fused-path crashes trip to composed
+  (degraded, still correct), cooldown drains to half-open, fused heals;
+* degraded staleness: refresh failure keeps serving the pinned epoch
+  with ``epoch_lag`` stamped;
+* background compaction: the merge runs off the serving path — queries
+  on the head and on pinned snapshots never wait on it;
+* batch pricing: ``plan_batch`` halves width under tight deadlines.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.core.planner import plan_batch
+from repro.durability.faults import FaultRegistry
+from repro.engine import SSBEngine, generate_ssb
+from repro.engine.queries import SSB_QUERIES
+from repro.serving import (PARAM_QUERIES, BatchRunner, LogicalModel,
+                           QueryScheduler, ServeConfig, WorkerCrash,
+                           WorkerPool)
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return generate_ssb(sf=0.002, seed=11)
+
+
+@pytest.fixture(scope="module")
+def engine(tables):
+    eng = SSBEngine(dict(tables), mode="jspim")
+    eng.warm_cache()
+    return eng
+
+
+@pytest.fixture(scope="module")
+def model(tables):
+    return LogicalModel(tables)
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _check(resp, model, *, epoch_model=None):
+    m = epoch_model if epoch_model is not None else model
+    t, g = m.param_query(resp.name, resp.params)
+    assert resp.total == t, (resp.name, resp.params)
+    assert np.array_equal(resp.groups, g), (resp.name, resp.params)
+
+
+# ---------------------------------------------------------------------------
+# parameterized queries and batch execution
+# ---------------------------------------------------------------------------
+
+
+def test_param_registry_covers_all_queries():
+    assert sorted(PARAM_QUERIES) == sorted(SSB_QUERIES)
+    for name, pq in PARAM_QUERIES.items():
+        assert len(pq.defaults) == pq.n_params
+        spec = pq.bind(pq.defaults)
+        assert spec.joined_dims() == SSB_QUERIES[name].joined_dims()
+
+
+def test_defaults_reproduce_canonical_results(engine):
+    """Binding the defaults is bit-identical to the constant-predicate
+    programs — the parameterization refactor changed no semantics."""
+    br = BatchRunner()
+    for name in sorted(SSB_QUERIES):
+        ref_t, ref_g = engine.run(name)
+        for composed in (False, True):
+            [(t, g)] = br.run_batch(engine, name,
+                                    [PARAM_QUERIES[name].defaults],
+                                    composed=composed)
+            assert t == int(ref_t), (name, composed)
+            assert np.array_equal(g, np.asarray(ref_g)), (name, composed)
+
+
+def test_batch_equals_composed_equals_oracle(engine, model):
+    rng = np.random.default_rng(7)
+    for name in sorted(PARAM_QUERIES):
+        pq = PARAM_QUERIES[name]
+        ps = [pq.sample(rng) for _ in range(5)]
+        batched = BatchRunner().run_batch(engine, name, ps)
+        composed = BatchRunner().run_batch(engine, name, ps, composed=True)
+        for p, (bt, bg), (ct, cg) in zip(ps, batched, composed):
+            ot, og = model.param_query(name, p)
+            assert bt == ct == ot, (name, p)
+            assert np.array_equal(bg, cg) and np.array_equal(bg, og), \
+                (name, p)
+
+
+def test_batch_program_reused_across_widths_and_epochs(engine):
+    """Pow-2 bucketing bounds traces; parameters are operands, so widths
+    within a bucket and different parameter values share one program."""
+    br = BatchRunner()
+    pq = PARAM_QUERIES["Q2.1"]
+    rng = np.random.default_rng(3)
+    br.run_batch(engine, "Q2.1", [pq.sample(rng) for _ in range(3)])
+    prog = br._batch_programs["Q2.1"]
+    br.run_batch(engine, "Q2.1", [pq.sample(rng) for _ in range(4)])
+    assert br._batch_programs["Q2.1"] is prog  # same pow-2 bucket
+
+
+def test_batch_rejects_wrong_arity(engine):
+    with pytest.raises(ValueError, match="params"):
+        BatchRunner().run_batch(engine, "Q1.1", [(1993, 1)])
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def test_admission_sheds_overflow_explicitly(engine, model):
+    sched = QueryScheduler(engine, ServeConfig(max_queue=4, max_batch=4))
+    try:
+        tickets = [sched.submit("Q1.1") for _ in range(10)]
+        shed = [t for t in tickets if t.done]
+        assert len(shed) == 6          # 4 admitted, 6 rejected at the door
+        for t in shed:
+            assert t.response.status == "rejected"
+            assert t.response.reason == "queue full"
+            assert t.response.retry_after_s > 0
+        assert sched.info()["queue_depth"] <= 4
+        sched.pump()
+        for t in tickets:
+            if t.response.status == "ok":
+                _check(t.response, model)
+    finally:
+        sched.close()
+
+
+def test_close_rejects_residue_and_refuses_new(engine):
+    sched = QueryScheduler(engine, ServeConfig())
+    t = sched.submit("Q1.1")
+    sched.close()
+    assert t.response.status == "rejected"
+    assert "closed" in t.response.reason
+    t2 = sched.submit("Q1.1")
+    assert t2.response.status == "rejected"
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expires_in_queue(engine):
+    clock = _FakeClock()
+    sched = QueryScheduler(engine, ServeConfig(clock=clock))
+    try:
+        t = sched.submit("Q1.1", deadline_s=1.0)
+        clock.t = 2.0
+        sched.pump()
+        assert t.response.status == "timed_out"
+        assert "queue" in t.response.reason
+    finally:
+        sched.close()
+
+
+def test_deadline_survivors_still_serve(engine, model):
+    clock = _FakeClock()
+    sched = QueryScheduler(engine, ServeConfig(clock=clock))
+    try:
+        doomed = sched.submit("Q1.1", deadline_s=1.0)
+        alive = sched.submit("Q1.1", deadline_s=100.0)
+        clock.t = 2.0
+        sched.pump()
+        assert doomed.response.status == "timed_out"
+        assert alive.response.status == "ok"
+        _check(alive.response, model)
+    finally:
+        sched.close()
+
+
+def test_plan_batch_halves_under_tight_deadline():
+    n_rows = 1_000_000
+    wide = plan_batch(queue_depth=16, slack_s=None, n_rows=n_rows,
+                      max_batch=16)
+    assert wide.size == 16 and wide.reason == "depth"
+    single = costmodel.batch_serve_seconds(1, n_rows)
+    tight = plan_batch(queue_depth=16, slack_s=single * 4, n_rows=n_rows,
+                       max_batch=16)
+    assert tight.size < 16 and tight.reason == "deadline"
+    assert tight.est_batch_s * 2.0 <= single * 4
+    # never below one request, however hopeless the slack
+    floor = plan_batch(queue_depth=16, slack_s=1e-12, n_rows=n_rows,
+                       max_batch=16)
+    assert floor.size == 1
+
+
+# ---------------------------------------------------------------------------
+# fault isolation / retries / circuit breaker
+# ---------------------------------------------------------------------------
+
+
+def test_worker_crash_is_isolated_and_batch_retries(engine, model):
+    faults = FaultRegistry()
+    sched = QueryScheduler(engine, ServeConfig(max_batch=4, backoff_s=0.0),
+                           faults=faults)
+    try:
+        faults.crash_on("worker:", nth=1)
+        tickets = [sched.submit("Q3.2") for _ in range(3)]
+        sched.pump()
+        for t in tickets:
+            assert t.response.status == "ok"
+            assert t.response.retries == 1
+            _check(t.response, model)
+        assert sched.pool.deaths == 1
+        assert sched.pool.width == sched.config.n_workers  # replaced
+    finally:
+        sched.close()
+
+
+def test_batch_fails_explicitly_after_retry_budget(engine):
+    faults = FaultRegistry()
+    faults.on("worker:", lambda site: (_ for _ in ()).throw(
+        RuntimeError("wedged executor")))
+    sched = QueryScheduler(engine, ServeConfig(max_retries=2,
+                                               backoff_s=0.0),
+                           faults=faults)
+    try:
+        t = sched.submit("Q1.2")
+        sched.pump()
+        assert t.response.status == "failed"
+        assert "3 attempts" in t.response.reason
+    finally:
+        sched.close()
+
+
+def test_breaker_degrades_to_composed_then_heals(engine, model):
+    faults = FaultRegistry()
+    sched = QueryScheduler(
+        engine, ServeConfig(breaker_threshold=3, breaker_cooldown=2,
+                            max_retries=2, backoff_s=0.0), faults=faults)
+    try:
+        faults.on("kernel_batch:Q4.1", lambda site: (_ for _ in ()).throw(
+            RuntimeError("poisoned fused kernel")))
+        first = sched.submit("Q4.1")
+        sched.pump()   # 3 fused attempts -> fail -> breaker opens
+        assert first.response.status == "failed"
+        assert sched.info()["breakers_open"] == ["Q4.1"]
+        # open: serves composed, degraded but correct
+        for _ in range(2):
+            t = sched.submit("Q4.1")
+            sched.pump()
+            assert t.response.status == "ok" and t.response.degraded
+            _check(t.response, model)
+        # cooldown drained -> half-open -> fused heals once fault clears
+        faults.clear()
+        t = sched.submit("Q4.1")
+        sched.pump()
+        assert t.response.status == "ok" and not t.response.degraded
+        assert sched.info()["breakers_open"] == []
+        # other query ids never saw the breaker
+        assert sched.info()["breaker_trips"] == 1
+    finally:
+        sched.close()
+
+
+def test_worker_pool_checkout_timeout_and_renewal():
+    pool = WorkerPool(1)
+    w = pool.checkout()
+    assert pool.checkout(timeout=0.01) is None
+    with pytest.raises(WorkerCrash):
+        w.run(lambda: (_ for _ in ()).throw(ValueError("boom")))
+    assert not w.alive
+    pool.checkin(w)
+    w2 = pool.checkout()
+    assert w2.alive and w2.wid != w.wid
+    pool.checkin(w2)
+    assert pool.deaths == 1
+
+
+# ---------------------------------------------------------------------------
+# degraded staleness + rebind
+# ---------------------------------------------------------------------------
+
+
+def test_refresh_failure_serves_stale_with_lag(tables):
+    eng = SSBEngine(dict(generate_ssb(sf=0.001, seed=2)), mode="jspim")
+    model = LogicalModel(generate_ssb(sf=0.001, seed=2))
+    faults = FaultRegistry()
+    sched = QueryScheduler(eng, ServeConfig(), faults=faults)
+    try:
+        faults.on("snapshot_refresh", lambda site: (_ for _ in ()).throw(
+            RuntimeError("refresh blocked")))
+        pinned = sched.info()["pinned_epoch"]
+        eng.ingest("supplier", np.array([10_000_001], np.int32),
+                   np.array([0], np.int32))
+        assert eng.epoch > pinned
+        t = sched.submit("Q1.1")
+        sched.pump()
+        r = t.response
+        assert r.status == "ok" and r.stale and r.degraded
+        assert r.epoch == pinned and r.epoch_lag == eng.epoch - pinned
+        _check(r, model)   # correct at the *reported* epoch (pre-ingest)
+        assert sched.info()["refresh_failures"] > 0
+        # fault lifted: next pump refreshes, lag disappears
+        faults.clear()
+        t2 = sched.submit("Q1.1")
+        sched.pump()
+        assert t2.response.epoch == eng.epoch
+        assert not t2.response.stale
+    finally:
+        sched.close()
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# background compaction off the serving path
+# ---------------------------------------------------------------------------
+
+
+def _grow_delta(eng, dim="supplier", n=64, base=20_000_000):
+    keys = np.arange(base, base + n, dtype=np.int32)
+    eng.ingest(dim, keys, np.zeros(n, np.int32), auto_compact=False)
+
+
+@pytest.mark.slow
+def test_background_compaction_never_blocks_queries(tables):
+    """A slow merge (400ms injected in ``compact_prepare``) must not
+    stall serving: queries pumped while the maintenance thread grinds
+    all complete well before the merge publishes."""
+    eng = SSBEngine(dict(tables), mode="jspim")
+    model = LogicalModel(tables)
+    faults = FaultRegistry()
+    sched = QueryScheduler(eng, ServeConfig(), faults=faults)
+    try:
+        warm = sched.submit("Q2.1")   # compile outside the timed window
+        sched.pump()
+        assert warm.response.status == "ok"
+        _grow_delta(eng)
+        warm2 = sched.submit("Q2.1")  # compile the delta-overlay program
+        sched.pump()                  # too, before the timed window
+        assert warm2.response.status == "ok"
+        deltas0 = eng.indexes["supplier"].delta
+        faults.delay_on("compact_prepare:supplier", 0.4)
+        bg = sched.compact_in_background("supplier")
+        served = 0
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < 0.3:    # inside the merge window
+            tk = sched.submit("Q2.1")
+            sched.pump()
+            assert tk.response.status == "ok"
+            served += 1
+        bg.join(timeout=30.0)
+        assert not bg.is_alive()
+        assert served >= 3, "queries stalled behind the merge"
+        assert sched.info()["bg_compactions"] == 1
+        assert eng.indexes["supplier"].delta is not deltas0
+        # published like any other epoch: fresh snapshot, correct results
+        tk = sched.submit("Q2.1")
+        sched.pump()
+        assert tk.response.status == "ok"
+        _check(tk.response, model)
+    finally:
+        sched.close()
+        eng.close()
+
+
+def test_publish_compact_conflict_is_detected(tables):
+    eng = SSBEngine(dict(tables), mode="jspim")
+    try:
+        _grow_delta(eng, base=21_000_000)
+        prepared = eng.prepare_compact("supplier")
+        assert prepared is not None
+        eng.compact("supplier")            # someone else swaps first
+        assert eng.publish_compact(prepared) is False
+        assert eng.prepare_compact("supplier") is None   # delta now empty
+    finally:
+        eng.close()
+
+
+def test_background_compaction_restages_on_conflict(tables):
+    eng = SSBEngine(dict(tables), mode="jspim")
+    faults = FaultRegistry()
+    sched = QueryScheduler(eng, ServeConfig(), faults=faults)
+    try:
+        _grow_delta(eng, base=22_000_000)
+        # between prepare and publish, a foreground compact sneaks in
+        fired = []
+
+        def steal(site):
+            if not fired:
+                fired.append(site)
+                eng.compact("supplier")
+
+        faults.on("compact_publish:supplier", steal)
+        bg = sched.compact_in_background("supplier")
+        bg.join(timeout=30.0)
+        # the conflict was detected; the re-stage saw an empty delta
+        assert sched.info()["bg_compact_conflicts"] == 1
+        assert sched.info()["bg_compactions"] == 0
+    finally:
+        sched.close()
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+def test_batch_serve_seconds_scales_with_batch_and_rows():
+    one = costmodel.batch_serve_seconds(1, 10_000)
+    assert one > 0
+    assert costmodel.batch_serve_seconds(8, 10_000) > one
+    assert costmodel.batch_serve_seconds(1, 80_000) > one
+    # batching amortizes dispatch overhead: 8 in one batch beats 8 singles
+    assert costmodel.batch_serve_seconds(8, 10_000) < 8 * one

@@ -1,0 +1,391 @@
+"""Chaos harness for the serving tier: degraded or rejected, never wrong.
+
+The generalization of PR 6's crash-injection idea to the serving stack:
+randomized timelines of {submit, pump, ingest, append, delete, compact,
+fault-arm, fault-clear} with faults injected at every serving site —
+worker crashes mid-batch, poisoned fused kernels, slow-worker
+stragglers, snapshot-refresh failures, background-compaction races,
+an ingest thread killed mid-stream, and recovery running concurrently
+with serving.
+
+The single gate every scenario ends with: each **completed** response is
+bit-identical to the single-threaded numpy oracle frozen at the epoch
+the response *reports* (stale is fine, wrong is not); everything else is
+an *explicit* rejection / timeout / failure — no silent drops, no
+unbounded queues, no response from a half-applied epoch.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.durability.faults import FaultRegistry
+from repro.engine import SSBEngine, generate_ssb
+from repro.engine.queries import DIM_PK, FACT_FK
+from repro.serving import (PARAM_QUERIES, LogicalModel, QueryScheduler,
+                           ServeConfig)
+
+pytestmark = pytest.mark.slow
+
+QUERY_POOL = ("Q1.1", "Q1.3", "Q2.1", "Q2.2", "Q3.2", "Q3.3", "Q4.2",
+              "Q4.3")
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return generate_ssb(sf=0.001, seed=13)
+
+
+# ---------------------------------------------------------------------------
+# driver: engine + logical model in lockstep, oracle frozen per epoch
+# ---------------------------------------------------------------------------
+
+
+class ChaosDriver:
+    """Mirrors every engine mutation into the numpy model and freezes
+    one oracle per published epoch (auto-compaction may publish several
+    epochs per mutation — compaction is result-invisible, so the extra
+    epochs freeze the same logical state)."""
+
+    def __init__(self, tables, eng):
+        self.eng = eng
+        self.model = LogicalModel(tables)
+        self.frozen = {eng.epoch: self.model.freeze()}
+        self._recorded = eng.epoch
+        self.next_fact_key = 60_000_000
+        self.next_dim_key = {d: 30_000_000 + i * 1_000_000
+                             for i, d in enumerate(DIM_PK)}
+
+    def _record(self):
+        while self._recorded < self.eng.epoch:
+            self._recorded += 1
+            self.frozen[self._recorded] = self.model.freeze()
+
+    def append_fact(self, rng, n):
+        src = rng.integers(0, self.model.fact["orderkey"].shape[0], n)
+        cols = {k: v[src].copy() for k, v in self.model.fact.items()}
+        cols["orderkey"] = np.arange(self.next_fact_key,
+                                     self.next_fact_key + n,
+                                     dtype=np.int32)
+        self.next_fact_key += n
+        self.eng.append_fact_rows(cols)
+        self.model.append_fact(cols)
+        self._record()
+
+    def append_dim(self, rng, d, n):
+        k0 = self.next_dim_key[d]
+        self.next_dim_key[d] += n
+        cols = {c: rng.integers(0, 5, n).astype(np.int32)
+                for c in self.model.dims[d] if c != DIM_PK[d]}
+        cols[DIM_PK[d]] = np.arange(k0, k0 + n, dtype=np.int32)
+        self.eng.append_rows(d, cols)
+        self.model.append_dim(d, cols)
+        self._record()
+
+    def delete_dim(self, rng, d, n):
+        pk = self.model.dims[d][DIM_PK[d]]
+        alive = np.asarray([k for k in pk
+                            if int(k) not in self.model.deleted[d]],
+                           np.int32)
+        if alive.size < 2 * n:
+            return
+        doomed = rng.choice(alive, n, replace=False)
+        self.eng.ingest(d, doomed, op="delete", auto_compact=False)
+        self.model.delete_keys(d, doomed)
+        self._record()
+
+    def compact(self, d):
+        self.eng.compact(d)
+        self._record()
+
+    def verify(self, resp) -> bool:
+        """True iff an ok response matches the oracle at its epoch."""
+        oracle = self.frozen[resp.epoch]
+        t, g = oracle.param_query(resp.name, resp.params)
+        return resp.total == t and np.array_equal(resp.groups, g)
+
+
+def _verify_all(driver, tickets, *, allow=("rejected", "timed_out",
+                                           "failed")):
+    """The never-wrong gate over a finished trial's tickets."""
+    counts = {"ok": 0}
+    for t in tickets:
+        r = t.response
+        assert r is not None, "ticket never resolved"
+        if r.status == "ok":
+            assert driver.verify(r), \
+                f"WRONG response: {r.name}{r.params} at epoch {r.epoch}"
+            counts["ok"] += 1
+        else:
+            assert r.status in allow, r.status
+            counts[r.status] = counts.get(r.status, 0) + 1
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# randomized chaos trials (deterministic pump-mode: the oracle gate)
+# ---------------------------------------------------------------------------
+
+
+def _chaos_trial(tables, seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    eng = SSBEngine(dict(tables), mode="jspim")
+    faults = FaultRegistry()
+    cfg = ServeConfig(max_queue=12, max_batch=4, n_workers=2,
+                      max_retries=2, backoff_s=0.0,
+                      breaker_threshold=2, breaker_cooldown=3,
+                      checkout_timeout_s=2.0)
+    sched = QueryScheduler(eng, cfg, faults=faults)
+    driver = ChaosDriver(tables, eng)
+    tickets = []
+    bg_threads = []
+    try:
+        for _ in range(int(rng.integers(25, 45))):
+            roll = rng.random()
+            if roll < 0.45:
+                name = QUERY_POOL[rng.integers(0, len(QUERY_POOL))]
+                p = PARAM_QUERIES[name].sample(rng)
+                dl = None if rng.random() < 0.7 else \
+                    float(rng.uniform(0.001, 5.0))
+                tickets.append(sched.submit(name, p, deadline_s=dl))
+            elif roll < 0.60:
+                sched.pump(int(rng.integers(1, 4)))
+            elif roll < 0.72:
+                driver.append_fact(rng, int(rng.integers(1, 60)))
+            elif roll < 0.80:
+                d = list(DIM_PK)[rng.integers(0, 4)]
+                driver.append_dim(rng, d, int(rng.integers(1, 10)))
+            elif roll < 0.85:
+                d = list(DIM_PK)[rng.integers(0, 4)]
+                driver.delete_dim(rng, d, int(rng.integers(1, 3)))
+            elif roll < 0.90:
+                d = list(DIM_PK)[rng.integers(0, 4)]
+                bg_threads.append(sched.compact_in_background(d))
+                driver._record()   # publish may land later; see below
+            else:
+                faults.clear()
+                site = rng.random()
+                if site < 0.4:
+                    faults.crash_on("worker:",
+                                    nth=int(rng.integers(1, 3)))
+                elif site < 0.6:
+                    q = QUERY_POOL[rng.integers(0, len(QUERY_POOL))]
+                    faults.crash_on(f"kernel_batch:{q}",
+                                    nth=int(rng.integers(1, 3)))
+                elif site < 0.8:
+                    faults.crash_on("snapshot_refresh",
+                                    nth=int(rng.integers(1, 3)))
+                else:
+                    faults.delay_on("worker:", float(rng.uniform(0, 0.01)))
+        faults.clear()
+        for t in bg_threads:
+            t.join(timeout=30.0)
+        # a background publish after the last mirror step bumps the
+        # engine past the recorded epochs; compaction is logically
+        # invisible, so record those epochs now (same frozen state)
+        driver._record()
+        sched.pump()
+        return _verify_all(driver, tickets)
+    finally:
+        sched.close()
+        eng.close()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_chaos_randomized_trials(tables, seed):
+    """Randomized fault/mutation/serve interleavings: every completed
+    response oracle-exact at its reported epoch.  (The benchmark runs
+    the 50-trial flavor of this gate; CI runs it via
+    ``benchmarks/serve_latency.py --smoke``.)"""
+    counts = _chaos_trial(tables, seed * 7919 + 3)
+    assert counts["ok"] > 0, "trial served nothing — no evidence"
+
+
+# ---------------------------------------------------------------------------
+# targeted scenarios
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_and_crash_under_threaded_serving(tables):
+    """Threaded dispatchers + concurrent ingest + a straggling worker +
+    periodic worker crashes: everything that completes is exact."""
+    eng = SSBEngine(dict(tables), mode="jspim")
+    faults = FaultRegistry()
+    sched = QueryScheduler(
+        eng, ServeConfig(max_queue=32, max_batch=4, n_workers=3,
+                         backoff_s=0.0, checkout_timeout_s=5.0),
+        faults=faults)
+    driver = ChaosDriver(tables, eng)
+    rng = np.random.default_rng(21)
+    mut_mu = threading.Lock()   # driver mirror is not thread-safe
+    stop = threading.Event()
+
+    def ingest_loop():
+        while not stop.is_set():
+            with mut_mu:
+                driver.append_fact(rng, 16)
+            time.sleep(0.002)
+
+    faults.delay_on("worker:", 0.004, every=True)   # everyone straggles
+    sched.start(n_dispatchers=2)
+    ing = threading.Thread(target=ingest_loop, daemon=True)
+    ing.start()
+    tickets = []
+    try:
+        for i in range(60):
+            if i % 20 == 10:
+                faults.crash_on("worker:", nth=1)
+            name = QUERY_POOL[i % len(QUERY_POOL)]
+            tickets.append(sched.submit(
+                name, PARAM_QUERIES[name].sample(rng)))
+            time.sleep(0.001)
+        for t in tickets:
+            assert t.wait(timeout=60.0) is not None
+    finally:
+        stop.set()
+        ing.join(timeout=10.0)
+        sched.stop()
+    with mut_mu:
+        counts = _verify_all(driver, tickets)
+    # under a universal straggler much of the load sheds — that is the
+    # design; the gate is that what completed is exact and the rest
+    # (checked by _verify_all) was explicitly rejected/timed out/failed
+    assert counts["ok"] >= 15
+    sched.close()
+    eng.close()
+
+
+def test_snapshot_release_races_refresh(tables):
+    """Rapid epoch churn swaps the pin while batches execute on retired
+    pins — refcounts must keep every in-flight snapshot alive exactly
+    until its last batch finishes, and results stay exact."""
+    eng = SSBEngine(dict(tables), mode="jspim")
+    sched = QueryScheduler(eng, ServeConfig(max_queue=64, max_batch=2,
+                                            n_workers=2))
+    driver = ChaosDriver(tables, eng)
+    rng = np.random.default_rng(5)
+    sched.start(n_dispatchers=2)
+    tickets = []
+    try:
+        for i in range(40):
+            name = QUERY_POOL[i % len(QUERY_POOL)]
+            tickets.append(sched.submit(
+                name, PARAM_QUERIES[name].sample(rng)))
+            if i % 3 == 0:   # churn: every refresh retires the old pin
+                driver.append_fact(rng, 8)
+        for t in tickets:
+            assert t.wait(timeout=60.0) is not None
+    finally:
+        sched.stop()
+    counts = _verify_all(driver, tickets)
+    assert counts["ok"] >= 30
+    # live snapshots are bounded: scheduler pin (+ maybe in-flight)
+    sched.close()
+    eng.close()
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_ingest_thread_killed_serving_degrades_not_wrong(tables):
+    """The ingest thread dies mid-stream; serving keeps answering from
+    the last published epoch — stale/lag-stamped once refresh fails,
+    and still oracle-exact at every reported epoch."""
+    eng = SSBEngine(dict(tables), mode="jspim")
+    faults = FaultRegistry()
+    sched = QueryScheduler(eng, ServeConfig(), faults=faults)
+    driver = ChaosDriver(tables, eng)
+    rng = np.random.default_rng(17)
+
+    died = threading.Event()
+
+    def doomed_ingest():
+        for i in range(5):
+            driver.append_fact(rng, 8)
+        died.set()
+        raise RuntimeError("ingest thread killed")   # daemon dies here
+
+    ing = threading.Thread(target=doomed_ingest, daemon=True)
+    # serve before, during, and after the ingest thread's death
+    tickets = [sched.submit("Q2.1", PARAM_QUERIES["Q2.1"].sample(rng))]
+    sched.pump()
+    ing.start()
+    died.wait(timeout=30.0)
+    ing.join(timeout=10.0)
+    # ingest is gone; epoch frozen at its last publish.  Refresh also
+    # starts failing (recovery in flight, say): serving must degrade.
+    faults.on("snapshot_refresh", lambda s: (_ for _ in ()).throw(
+        RuntimeError("refresh blocked")))
+    stale_seen = False
+    for _ in range(6):
+        t = sched.submit("Q3.2", PARAM_QUERIES["Q3.2"].sample(rng))
+        tickets.append(t)
+        sched.pump()
+        r = t.response
+        if r.status == "ok" and r.stale:
+            stale_seen = True
+    counts = _verify_all(driver, tickets)
+    assert counts["ok"] == len(tickets)   # nothing was wrong or dropped
+    # whether lag appeared depends on refresh timing vs the kill; the
+    # invariant that matters is exactness above, but the degraded path
+    # must have been exercised when the pin lagged the head
+    if sched.info()["pinned_epoch"] < eng.epoch:
+        assert stale_seen
+    sched.close()
+    eng.close()
+
+
+def test_recovery_concurrent_with_serving(tables, tmp_path):
+    """Crash-recover the engine while a scheduler keeps serving pinned
+    snapshots from the dead incarnation, then rebind: pre-rebind answers
+    are stale-exact at their reported epochs, post-rebind answers serve
+    the recovered head."""
+    eng = SSBEngine(dict(tables), mode="jspim")
+    root = os.fspath(tmp_path / "root")
+    eng.persist(root)
+    driver = ChaosDriver(tables, eng)
+    rng = np.random.default_rng(29)
+    driver.append_fact(rng, 20)
+    sched = QueryScheduler(eng, ServeConfig())
+    tickets = [sched.submit("Q1.1", PARAM_QUERIES["Q1.1"].sample(rng))]
+    sched.pump()
+    # simulate process death: the WAL handle closes, mutations stop,
+    # but the scheduler still holds the old incarnation's snapshot
+    eng.close()
+    t = sched.submit("Q2.2", PARAM_QUERIES["Q2.2"].sample(rng))
+    tickets.append(t)
+    sched.pump()
+    assert t.response.status == "ok"   # pinned snapshot outlives close
+    # recovery runs concurrently with serving on the recovered root
+    recovered = {}
+
+    def recover():
+        recovered["eng"] = SSBEngine.open(root)
+
+    rec = threading.Thread(target=recover)
+    rec.start()
+    t2 = sched.submit("Q3.3", PARAM_QUERIES["Q3.3"].sample(rng))
+    tickets.append(t2)
+    sched.pump()
+    rec.join(timeout=120.0)
+    eng2 = recovered["eng"]
+    assert eng2.epoch == eng.epoch   # every published epoch recovered
+    # cut over: serving continues against the recovered incarnation
+    sched.rebind(eng2)
+    t3 = sched.submit("Q4.2", PARAM_QUERIES["Q4.2"].sample(rng))
+    tickets.append(t3)
+    sched.pump()
+    assert t3.response.status == "ok"
+    assert t3.response.epoch == eng2.epoch and not t3.response.stale
+    # post-rebind mutations publish new epochs and serve exactly
+    driver.eng = eng2
+    driver.append_fact(rng, 10)
+    t4 = sched.submit("Q4.3", PARAM_QUERIES["Q4.3"].sample(rng))
+    tickets.append(t4)
+    sched.pump()
+    assert t4.response.epoch == eng2.epoch
+    counts = _verify_all(driver, tickets)
+    assert counts["ok"] == len(tickets)
+    sched.close()
+    eng2.close()
