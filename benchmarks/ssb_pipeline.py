@@ -6,10 +6,20 @@ per-query loop (eager, probe-per-query) as the fixed reference the fused
 pipeline is tracked against.  Written by ``benchmarks/run.py`` so the perf
 trajectory is recorded from this PR onward.
 
+PR 8 adds the fusion comparison on the jspim/xla engine: the one-launch
+mega suite program (``run_all(fusion="mega", use_cache=False)`` — every
+dimension probed exactly once *inside* a single compiled launch, all 13
+filter→aggregate tails in the same program) vs the composed per-query
+pipeline (``fusion="composed"`` — one probe→tail program per query,
+re-probing its joined dimensions each time).  Both are warm-compiled,
+min of 3; this is the committed headline for the mega speedup.  The
+cross-query probe *cache* is the separate ``warm_total_s`` axis above.
+
 CI runs ``--smoke`` (same scale factor, fewer reps, no interpret-mode
 pallas flavor) with ``--check BENCH_ssb.json``: the job fails if the warm
 ``run_all`` of the jspim/xla engine regresses more than 2x against the
-committed baseline.
+committed baseline, or if the mega path stops beating composed (a defused
+suite program is a pipeline regression even when absolute times drift).
 """
 from __future__ import annotations
 
@@ -108,6 +118,29 @@ def collect(sf: float = 0.02, seed: int = 0, smoke: bool = False) -> dict:
         report["seed_loop"]["total_s"] / jx["warm_total_s"])
     report["speedup_warm_vs_cold"] = (
         jx["cold_total_s"] / jx["warm_total_s"])
+
+    # --- fusion: one-launch mega suite vs composed per-query pipeline -----
+    # Cache-cold on purpose: with the host-side probe cache warm, both
+    # flavors execute only tails and the comparison degenerates to
+    # dispatch overhead (~1x on CPU).  Cache-cold is where the mega
+    # program earns its launch: each dimension is probed once inside it,
+    # while composed re-probes per query (~33 probes across the suite).
+    feng = SSBEngine(tables, mode="jspim")
+    feng.run_all(fusion="mega", use_cache=False)      # compile one-launch
+    feng.run_all(fusion="composed", use_cache=False)  # compile per-query
+
+    def _min3(fn):
+        return min(_time_once(fn) for _ in range(3))
+
+    mega_s = _min3(
+        lambda: feng.run_all(fusion="mega", use_cache=False))
+    composed_s = _min3(
+        lambda: feng.run_all(fusion="composed", use_cache=False))
+    report["fusion"] = {
+        "run_all_mega_s": mega_s,
+        "run_all_composed_s": composed_s,
+        "speedup_mega_vs_composed": composed_s / mega_s,
+    }
     return report
 
 
@@ -141,6 +174,34 @@ def check_regression(report: dict, committed_path: str,
     }
 
 
+def check_fusion(report: dict, committed_path: str,
+                 factor: float = REGRESSION_FACTOR) -> dict:
+    """Gate the mega suite program against the committed fusion numbers.
+
+    Two failure modes: the mega path got slower than ``factor``× the
+    committed wall time, or it stopped beating composed outright (a
+    defused suite program — e.g. run_all silently falling back to the
+    per-query loop — regresses the *ratio* even on a slow runner where
+    absolute times are useless)."""
+    with open(committed_path) as f:
+        committed = json.load(f)
+    ref = committed.get("fusion")
+    if ref is None:   # committed baseline predates the fusion section
+        return {"skipped": "no committed fusion baseline",
+                "regressed": False}
+    got = report["fusion"]
+    return {
+        "committed_mega_s": ref["run_all_mega_s"],
+        "measured_mega_s": got["run_all_mega_s"],
+        "committed_speedup": round(ref["speedup_mega_vs_composed"], 3),
+        "measured_speedup": round(got["speedup_mega_vs_composed"], 3),
+        "max_ratio": factor,
+        "regressed": (
+            got["run_all_mega_s"] > ref["run_all_mega_s"] * factor
+            or got["speedup_mega_vs_composed"] < 1.0),
+    }
+
+
 def run():
     """CSV rows for the run.py orchestrator (also writes BENCH_ssb.json)."""
     report = write_json()
@@ -152,6 +213,11 @@ def run():
             f"ssb/{flavor}_warm_total", r["warm_total_s"] * 1e6,
             f"cold_total_us={r['cold_total_s'] * 1e6:.0f};"
             f"vs_seed={sl / r['warm_total_s']:.1f}x"))
+    fu = report["fusion"]
+    rows.append(row(
+        "ssb/mega_run_all", fu["run_all_mega_s"] * 1e6,
+        f"composed_us={fu['run_all_composed_s'] * 1e6:.0f};"
+        f"speedup={fu['speedup_mega_vs_composed']:.2f}x"))
     return rows
 
 
@@ -171,19 +237,24 @@ def main() -> None:
                        else "BENCH_ssb.json")
     report = collect(smoke=args.smoke)
     if args.check:
-        report["checks"] = {"warm_run_all": check_regression(report,
-                                                             args.check)}
+        report["checks"] = {
+            "warm_run_all": check_regression(report, args.check),
+            "fusion_mega": check_fusion(report, args.check),
+        }
     with open(out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
     summary = {k: round(v["warm_total_s"], 4)
                for k, v in report["engines"].items()}
     summary["speedup_warm_vs_seed_loop"] = round(
         report["speedup_warm_vs_seed_loop"], 2)
+    summary["speedup_mega_vs_composed"] = round(
+        report["fusion"]["speedup_mega_vs_composed"], 2)
     print(json.dumps({"warm_total_s": summary,
                       **report.get("checks", {})}, indent=2))
-    if args.check and report["checks"]["warm_run_all"]["regressed"]:
-        raise SystemExit("warm run_all regressed >"
-                         f"{REGRESSION_FACTOR}x vs {args.check}")
+    if args.check:
+        bad = [k for k, v in report["checks"].items() if v["regressed"]]
+        if bad:
+            raise SystemExit(f"bench regressed vs {args.check}: {bad}")
 
 
 if __name__ == "__main__":

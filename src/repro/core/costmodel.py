@@ -526,6 +526,49 @@ def batch_serve_seconds(batch: int, n_rows: int,
     return ns * 1e-9
 
 
+# Fraction of per-query stream work the one-launch fused program actually
+# pays: fusing all queries into one dispatch lets the compiler share the
+# common subexpressions (group-key construction, measures, dimension-mask
+# gathers repeated across the SSB flights), so each query costs well under
+# a full set of passes.  Calibrated against BENCH_ssb.json warm run_all.
+FUSED_SHARED_FRAC = 0.6
+
+
+def fused_query_seconds(n_rows: int, n_queries: int = 1,
+                        backend: str = "cpu", *, kernel: str = "xla",
+                        interpret: bool | None = None) -> float:
+    """Modeled wall seconds of the one-launch fused (mega) query path.
+
+    One dispatch executes ``n_queries`` probe→filter→aggregate tails over
+    an ``n_rows`` fact stream.  For the XLA suite program the win is
+    structural: one fixed dispatch instead of ``n_queries``, and shared
+    subexpressions shaving the per-query stream work to
+    ``FUSED_SHARED_FRAC``.  For the Pallas mega-kernel off-TPU the
+    interpreter tax dominates (``interpret_probe_ns`` per row) — the
+    planner must never auto-pick it on a host backend.
+    """
+    c = HOST_COSTS.get(backend, HOST_COSTS["cpu"])
+    rows = max(1, n_rows)
+    if kernel.startswith("pallas"):
+        interp = (backend != "tpu") if interpret is None else interpret
+        probe_ns = c.interpret_probe_ns if interp else c.lane_ns
+        ns = rows * max(1, n_queries) * probe_ns + c.op_ns
+    else:
+        ns = (max(1, n_queries) * rows * SERVE_PASSES_PER_REQUEST
+              * FUSED_SHARED_FRAC * c.pass_ns + c.op_ns)
+    return ns * 1e-9
+
+
+def composed_query_seconds(n_rows: int, n_queries: int = 1,
+                           backend: str = "cpu") -> float:
+    """Modeled wall seconds of the composed (per-query dispatch) path:
+    each query pays its full stream passes plus its own dispatch."""
+    c = HOST_COSTS.get(backend, HOST_COSTS["cpu"])
+    ns = max(1, n_queries) * (max(1, n_rows) * SERVE_PASSES_PER_REQUEST
+                              * c.pass_ns + c.op_ns)
+    return ns * 1e-9
+
+
 def data_overhead_bytes(n_fact: int, n_dim: int, dup_total: int,
                         cfg: PIMConfig = PIMConfig()) -> dict:
     """§4.2.1 accounting: dictionary + encoded fact copy + hash table + dup list."""

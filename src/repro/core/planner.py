@@ -428,3 +428,56 @@ def refine_plan(plan: SchedulePlan, exact_cold: int,
     cap = min(_next_pow2(n_probes),
               max(256, _next_pow2(int(exact_cold * 1.15) + 256)))
     return dataclasses.replace(plan, cold_capacity=cap)
+
+
+# --------------------------------------------------------------------------
+# Query-program fusion planning (PR 8 — the mega vs composed split)
+# --------------------------------------------------------------------------
+
+# Group-key spaces beyond this approach the VMEM ceiling for the Pallas
+# mega-kernel's resident (1, num_segments) accumulator block (int32 ×
+# double-buffered operands); the planner gates larger spaces onto the
+# composed path regardless of the modeled win.
+MAX_MEGA_SEGMENTS = 1 << 21
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """Fusion decision for a query (suite): mega one-launch vs composed."""
+
+    fusion: str          # "mega" | "composed"
+    reason: str          # "modeled" | "vmem" | "interpret" | "forced"
+    est_mega_s: float
+    est_composed_s: float
+
+    @property
+    def modeled_speedup(self) -> float:
+        return self.est_composed_s / max(self.est_mega_s, 1e-12)
+
+
+def plan_query(n_rows: int, n_queries: int = 1, *, backend: str = "cpu",
+               kernel: str = "xla", interpret: bool | None = None,
+               num_segments: int = 1,
+               force: str | None = None) -> QueryPlan:
+    """Pick the query-program shape: one-launch fused ("mega") or
+    per-stage/per-query dispatch ("composed").
+
+    The decision is the cost model's ``fused_query_seconds`` vs
+    ``composed_query_seconds``, with two hard gates in front: a Pallas
+    mega-kernel running in interpret mode never wins (the interpreter tax
+    is ~1000× a compiled pass), and group-key spaces past
+    ``MAX_MEGA_SEGMENTS`` don't fit the kernel's resident accumulator.
+    ``force`` bypasses the model (an ``ExecutionPolicy.fusion`` override).
+    """
+    mega_s = costmodel.fused_query_seconds(
+        n_rows, n_queries, backend, kernel=kernel, interpret=interpret)
+    composed_s = costmodel.composed_query_seconds(n_rows, n_queries, backend)
+    if force in ("mega", "composed"):
+        return QueryPlan(force, "forced", mega_s, composed_s)
+    interp = (backend != "tpu") if interpret is None else interpret
+    if kernel.startswith("pallas") and interp:
+        return QueryPlan("composed", "interpret", mega_s, composed_s)
+    if num_segments > MAX_MEGA_SEGMENTS:
+        return QueryPlan("composed", "vmem", mega_s, composed_s)
+    fusion = "mega" if mega_s < composed_s else "composed"
+    return QueryPlan(fusion, "modeled", mega_s, composed_s)

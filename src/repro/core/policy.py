@@ -1,0 +1,90 @@
+"""ExecutionPolicy — the single surface for every execution knob.
+
+Before PR 8 the knobs were scattered: ``SSBEngine(mode=, probe_impl=,
+schedule=)``, per-call ``use_cache=`` on ``run``/``run_all``, the
+interpret auto-select buried in ``kernels/bucket_probe._resolve_interpret``
+and ``BatchRunner.run_batch(composed=...)``.  They all collapse into one
+frozen, hashable dataclass threaded through ``SSBEngine`` →
+``EpochSnapshot`` → ``_QueryRunner`` → ``BatchRunner``.  The legacy
+kwargs survive as thin shims (``resolve_policy``) so every pre-existing
+call site and test keeps working unchanged; new code should construct an
+``ExecutionPolicy`` and pass ``policy=``.
+
+Frozen + hashable matters: the policy (or fields derived from it) rides
+into jit-static positions, so two engines with equal policies share
+compiled programs and an engine's policy can never drift mid-trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+MODES = ("jspim", "baseline", "pid")
+KERNELS = ("xla", "pallas", "pallas_stream")
+SCHEDULES = ("auto", "gathered", "stream", "deduped", "hot_cold")
+FUSIONS = ("auto", "mega", "composed")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """One frozen value describing *how* queries execute.
+
+    mode      -- probe algorithm family ("jspim" hash probe, "baseline"
+                 sort-merge, "pid" PID-join emulation).
+    kernel    -- probe implementation ("xla" gather math, "pallas" fused
+                 kernels, "pallas_stream" prefetch-grid variant).  This is
+                 the old ``probe_impl`` knob.
+    schedule  -- probe schedule override; "auto" lets the planner pick
+                 per (dimension, backend).
+    fusion    -- query-program shape: "mega" forces the one-launch
+                 probe→filter→aggregate path, "composed" forces the
+                 per-stage pipeline, "auto" consults ``plan_query``.
+    interpret -- Pallas interpret-mode override (None = compiled iff the
+                 default backend is TPU, mirroring _resolve_interpret).
+    use_cache -- default for the cross-query probe cache on ``run``.
+    """
+
+    mode: str = "jspim"
+    kernel: str = "xla"
+    schedule: str = "auto"
+    fusion: str = "auto"
+    interpret: bool | None = None
+    use_cache: bool = True
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}")
+        if self.kernel not in KERNELS:
+            raise ValueError(f"unknown kernel {self.kernel!r}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"unknown schedule {self.schedule!r}")
+        if self.fusion not in FUSIONS:
+            raise ValueError(f"unknown fusion {self.fusion!r}")
+
+    def replace(self, **kw) -> "ExecutionPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+def resolve_policy(policy: ExecutionPolicy | None = None, *,
+                   mode: str | None = None,
+                   probe_impl: str | None = None,
+                   schedule: str | None = None,
+                   **overrides) -> ExecutionPolicy:
+    """Merge an explicit policy with legacy kwargs (deprecation shims).
+
+    The legacy ``mode=``/``probe_impl=``/``schedule=`` kwargs are kept so
+    existing call sites work unchanged; passing one *alongside* an
+    explicit ``policy`` that disagrees is an error — silent precedence
+    would make the policy lie about how the engine executes.
+    """
+    legacy = {"mode": mode, "kernel": probe_impl, "schedule": schedule}
+    legacy.update(overrides)
+    legacy = {k: v for k, v in legacy.items() if v is not None}
+    if policy is None:
+        return ExecutionPolicy(**legacy)
+    conflicts = {k: v for k, v in legacy.items()
+                 if getattr(policy, k) != v}
+    if conflicts:
+        raise ValueError(
+            f"policy={policy} conflicts with legacy kwargs {conflicts}; "
+            f"pass one or the other")
+    return policy

@@ -25,15 +25,17 @@ from repro.core import (Dictionary, JSPIMTable, build_dictionary, build_table,
                         encode, join as core_join, probe, probe_deduped,
                         suggest_num_buckets)
 from repro.core.delta import (TOMBSTONE, DeltaTable, apply_batch,
-                              delta_entries, empty_delta, merge_entries,
-                              suggest_delta_buckets)
+                              delta_entries, delta_is_empty, empty_delta,
+                              merge_entries, suggest_delta_buckets)
 from repro.core.dictionary import NO_CODE, encode_np, extend_dictionary
 from repro.core.hash_table import EMPTY_KEY, table_entries
 from repro.core.lookup import (JoinResult, ProbeResult, build_hot_table,
                                overlay_delta, probe_hot_cold, splice_probe)
 from repro.core.planner import SchedulePlan
 from repro.core.skew import SkewStats, measure_skew
-from repro.kernels import probe_table, probe_table_filtered, slot_predicate
+from repro.kernels import (delta_slot_words, probe_table,
+                           probe_table_filtered, probe_table_filtered_delta,
+                           slot_predicate)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -262,6 +264,25 @@ def compact_index(index: DimIndex, *, max_grow_retries: int = 8,
     return DimIndex(dictionary=d2, table=merged, stats=stats, delta=None)
 
 
+def effective_index(index: DimIndex) -> DimIndex:
+    """Strip a provably-empty delta so probes keep their fused no-delta path.
+
+    Delta presence is pytree *structure*: an index carrying an all-empty
+    delta traces the overlay (or post-filter fallback) variant of every
+    probe program even though the overlay can never hit — the mirror of
+    the PR 5 empty-compact fix.  Host-side only: under a jit trace the
+    occupancy is unknowable, so the index passes through unchanged (the
+    strip must happen at the program *call* boundary, where it also keys
+    the trace onto the cheaper no-delta structure).
+    """
+    d = index.delta
+    if d is None or isinstance(d.fill, jax.core.Tracer):
+        return index
+    if delta_is_empty(d):
+        return dataclasses.replace(index, delta=None)
+    return index
+
+
 def lookup(index: DimIndex, fact_keys: jax.Array, *, impl: str = "xla",
            deduped: bool = False, schedule: str | None = None,
            plan: SchedulePlan | None = None,
@@ -275,6 +296,7 @@ def lookup(index: DimIndex, fact_keys: jax.Array, *, impl: str = "xla",
     requires ``hot_codes`` (hottest-first dictionary codes, or the full
     code range for a ``full_map`` plan) and a ``plan`` for geometry.
     """
+    index = effective_index(index)
     codes = encode(index.dictionary, fact_keys)
     if schedule is None:
         if plan is not None:
@@ -322,23 +344,32 @@ def lookup_filtered(index: DimIndex, fact_keys: jax.Array,
     be filtered after CSR expansion (PK dimensions have none).
 
     Only the gathered schedule has a fused kernel; ``pallas_stream`` keeps
-    its per-probe DMA schedule and applies the predicate afterwards.
+    its per-probe DMA schedule and applies the predicate afterwards.  On
+    the ``pallas`` impl a live delta no longer forces the post-filter
+    fallback: the delta-aware kernel folds the delta bucket gather and the
+    predicate-folded delta words into the same grid (an empty delta is
+    stripped outright by ``effective_index``).
     """
+    index = effective_index(index)
     codes = encode(index.dictionary, fact_keys)
     kernel_filtered = False
     if impl == "pallas":
         pred = slot_predicate(index.table, dim_mask)
-        pr = probe_table_filtered(index.table, codes, pred)
+        if index.delta is not None:
+            dwords = delta_slot_words(index.delta, dim_mask)
+            pr = probe_table_filtered_delta(index.table, codes, pred,
+                                            index.delta, fact_keys, dwords)
+        else:
+            pr = probe_table_filtered(index.table, codes, pred)
         kernel_filtered = True
     elif impl == "pallas_stream":
         pr = probe_table(index.table, codes, schedule="stream")
     else:
         pr = probe(index.table, codes)
-    if index.delta is not None:
+    if not kernel_filtered and index.delta is not None:
         # delta rows bypassed any in-kernel predicate; re-apply the row
-        # filter after the overlay (idempotent for kernel-filtered hits)
+        # filter after the overlay
         pr = overlay_delta(pr, index.delta, fact_keys)
-        kernel_filtered = False
     if kernel_filtered:
         return pr
     n = dim_mask.shape[0]

@@ -51,8 +51,9 @@ class EpochSnapshot(_QueryRunner):
         self.engine: SSBEngine | None = engine
         self.epoch = engine.epoch
         self.fact_epoch = engine.fact_epoch
-        self.mode = engine.mode
-        self.probe_impl = engine.probe_impl
+        # the frozen ExecutionPolicy is immutable — aliasing it IS the
+        # freeze (mode/probe_impl/schedule are _QueryRunner views of it)
+        self.policy = engine.policy
         # the image: shallow copies of the engine's state dicts — the
         # values (Tables, DimIndex pytrees, plans, probe tuples) are
         # immutable, so aliasing them IS the freeze.  The fact table gets
@@ -75,6 +76,10 @@ class EpochSnapshot(_QueryRunner):
         # snapshot takes a private copy the engine's re-plans cannot clear
         self._cached_programs = engine._cached_programs
         self._full_programs = dict(engine._full_programs)
+        # one-launch programs are epoch- and plan-oblivious (operands are
+        # pytree args), so they share outright like the cached programs
+        self._suite_programs = engine._suite_programs
+        self._mega_programs = engine._mega_programs
         # pin records: the buffer generations this snapshot aliases.  The
         # engine's donation sites check these against their *current*
         # generations — matching means "donating now would delete arrays
@@ -112,6 +117,9 @@ class EpochSnapshot(_QueryRunner):
         self._hot_codes = {}
         self._probe_cache = {}
         self._full_programs = {}
+        # rebind (not clear!) the shared one-launch program dicts
+        self._suite_programs = {}
+        self._mega_programs = {}
 
     def epoch_lag(self) -> int:
         """How many epochs the head engine has advanced past this image.
@@ -159,9 +167,10 @@ class EpochSnapshot(_QueryRunner):
         for dim in (dims if dims is not None else DIM_PK):
             self.probe_dim(dim)
 
-    def run(self, name: str, *, use_cache: bool = True):
+    def run(self, name: str, *, use_cache: bool | None = None,
+            fusion: str | None = None):
         self._check_live()
-        return super().run(name, use_cache=use_cache)
+        return super().run(name, use_cache=use_cache, fusion=fusion)
 
     def cache_info(self) -> dict:
         return {"epoch": self.epoch, "fact_epoch": self.fact_epoch,

@@ -1,12 +1,20 @@
 """Pallas TPU kernels for the JSPIM search engine + pure-jnp oracles."""
 from repro.kernels.coalesce_window import coalesce_window_mask
-from repro.kernels.ops import (probe_table, probe_table_filtered,
-                               probe_table_ref, slot_predicate)
-from repro.kernels.ref import (NULL_WORD, bucket_probe_ref,
+from repro.kernels.fused_query import fused_query
+from repro.kernels.ops import (KERNEL_REGISTRY, KernelOp, delta_slot_words,
+                               kernel_supported, probe_table,
+                               probe_table_filtered,
+                               probe_table_filtered_delta, probe_table_ref,
+                               register_kernel, slot_predicate)
+from repro.kernels.ref import (NULL_WORD, bucket_probe_ref, fused_query_ref,
+                               probe_filter_rows_delta_ref,
                                probe_filter_rows_ref, probe_rows_ref,
                                unpack_words)
 
-__all__ = ["coalesce_window_mask", "probe_table", "probe_table_filtered",
-           "probe_table_ref", "slot_predicate", "NULL_WORD",
-           "bucket_probe_ref", "probe_filter_rows_ref", "probe_rows_ref",
-           "unpack_words"]
+__all__ = ["coalesce_window_mask", "fused_query", "KERNEL_REGISTRY",
+           "KernelOp", "delta_slot_words", "kernel_supported", "probe_table",
+           "probe_table_filtered", "probe_table_filtered_delta",
+           "probe_table_ref", "register_kernel", "slot_predicate",
+           "NULL_WORD", "bucket_probe_ref", "fused_query_ref",
+           "probe_filter_rows_delta_ref", "probe_filter_rows_ref",
+           "probe_rows_ref", "unpack_words"]

@@ -206,3 +206,83 @@ def probe_filter_rows(probe_keys, rows_k, rows_v, rows_p, *,
         name="jspim_probe_filter_rows",
     )(pk, rk, rv, rp)
     return out[:m, 0]
+
+
+# --------------------------------------------------------------------------
+# Kernel D: delta-aware fused comparator + predicate filter
+# --------------------------------------------------------------------------
+#
+# The §3.2.3 update path folded into the search engine: the delta buffer's
+# bucket rows ride in as three extra operand planes (raw-key comparator rows
+# plus predicate-folded value words — see ``ops.delta_slot_words``), probed
+# by the *raw* fact keys in the same grid step as the compacted table.  A
+# delta hit overrides the main result unconditionally: live upserts win,
+# tombstones and predicate-filtered delta rows carry NULL_WORD and read as
+# misses.  This is what lets live-ingest engines keep the fused path instead
+# of degrading to the post-filter fallback.
+
+
+def _probe_filter_rows_delta_kernel(pk_ref, rk_ref, rv_ref, rp_ref,
+                                    dpk_ref, drk_ref, drw_ref, out_ref):
+    pk = pk_ref[...]                       # (PB, 1) dictionary codes
+    match = rk_ref[...] == pk              # (PB, W) comparator array
+    found = jnp.any(match, axis=1, keepdims=True) & (pk != _EMPTY)
+    word = jnp.sum(jnp.where(match, rv_ref[...], 0), axis=1, keepdims=True)
+    pred = jnp.sum(jnp.where(match, rp_ref[...], 0), axis=1, keepdims=True) > 0
+    main = jnp.where(found & pred, word.astype(jnp.int32), jnp.int32(_NULL))
+    # delta overlay: raw-key comparator over the delta bucket rows
+    dpk = dpk_ref[...]                     # (PB, 1) raw fact keys
+    dmatch = drk_ref[...] == dpk           # (PB, DW)
+    dhit = jnp.any(dmatch, axis=1, keepdims=True) & (dpk != _EMPTY)
+    dword = jnp.sum(jnp.where(dmatch, drw_ref[...], 0), axis=1, keepdims=True)
+    out_ref[...] = jnp.where(dhit, dword.astype(jnp.int32), main)
+
+
+@functools.partial(jax.jit, static_argnames=("block_pb", "interpret"))
+def probe_filter_rows_delta(probe_keys, rows_k, rows_v, rows_p,
+                            delta_keys, drows_k, drows_w, *,
+                            block_pb: int = 256,
+                            interpret: bool | None = None):
+    """Delta-aware fused probe+predicate -> (m,) packed value words.
+
+    ``probe_keys``/``rows_*`` are the Kernel C operands (dictionary codes +
+    gathered hash-table planes).  ``delta_keys`` are the *raw* fact keys and
+    ``drows_k``/``drows_w`` the delta bucket rows gathered by the delta's
+    own hash — ``drows_w`` must already be predicate-folded
+    (``ops.delta_slot_words``): filtered-out payloads and tombstones carry
+    NULL_WORD.  A delta hit overrides the main probe unconditionally.
+    """
+    interpret = _resolve_interpret(interpret)
+    m, w = rows_k.shape
+    dw = drows_k.shape[1]
+    pb = min(block_pb, max(8, m))
+    pad = (-m) % pb
+    pk = jnp.pad(probe_keys.astype(jnp.int32), (0, pad),
+                 constant_values=int(EMPTY_KEY))[:, None]
+    rk = jnp.pad(rows_k.astype(jnp.int32), ((0, pad), (0, 0)))
+    rv = jnp.pad(rows_v.astype(jnp.int32), ((0, pad), (0, 0)))
+    rp = jnp.pad(rows_p.astype(jnp.int32), ((0, pad), (0, 0)))
+    dpk = jnp.pad(delta_keys.astype(jnp.int32), (0, pad),
+                  constant_values=int(EMPTY_KEY))[:, None]
+    drk = jnp.pad(drows_k.astype(jnp.int32), ((0, pad), (0, 0)),
+                  constant_values=int(EMPTY_KEY))
+    drw = jnp.pad(drows_w.astype(jnp.int32), ((0, pad), (0, 0)))
+    grid = ((m + pad) // pb,)
+    out = pl.pallas_call(
+        _probe_filter_rows_delta_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((pb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((pb, w), lambda i: (i, 0)),
+            pl.BlockSpec((pb, w), lambda i: (i, 0)),
+            pl.BlockSpec((pb, w), lambda i: (i, 0)),
+            pl.BlockSpec((pb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((pb, dw), lambda i: (i, 0)),
+            pl.BlockSpec((pb, dw), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((pb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + pad, 1), jnp.int32),
+        interpret=interpret,
+        name="jspim_probe_filter_rows_delta",
+    )(pk, rk, rv, rp, dpk, drk, drw)
+    return out[:m, 0]

@@ -1,0 +1,151 @@
+"""The delta-aware fused probe→filter→aggregate mega-kernel.
+
+One SSB query per dimension set is ONE kernel launch: every grid step
+probes a (PB,)-block of fact rows against *all* joined dimensions'
+hash-table rows (the comparator arrays of Kernel A), decodes the per-slot
+**attribute plane**, applies the §4.1.5 predicate mask and the §3.2.3
+delta overlay in VMEM, and accumulates a ``segment_sum`` straight into the
+group-key output block — the software analogue of JSPIM running the whole
+join+select inside the memory module with no off-chip round trips.
+
+Attribute-plane encoding (built host-side, ``engine`` layer):
+
+    slot_attr = (group_key * stride) << 1 | pred_bit     for a unique,
+                                                         in-range payload
+    slot_attr = -1                                       dup / invalid slot
+    delta_attr follows the same encoding; tombstones are -1.
+
+so the kernel needs ONE gathered int32 plane per dimension instead of
+separate value/predicate/group planes: ``attr >= 0`` is "usable match",
+``attr & 1`` the predicate bit, ``attr >> 1`` the pre-strided group-key
+contribution, and the query's composite group key is simply the sum over
+dimensions.  Unique-PK contract: dimension tables must have unique keys
+(true for every SSB dimension); duplicate-tagged slots read as misses.
+
+Accumulation uses the guide's sequential-grid pattern: the output block is
+zero-initialized at ``program_id == 0`` and every step adds its partial
+``segment_sum``, so the (1, num_segments) result never leaves VMEM between
+steps.  num_segments is padded to a lane multiple (128) and sliced after.
+All arithmetic is int32 modular — bit-identical to the composed
+``_filter_aggregate`` tail by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hash_table import EMPTY_KEY
+from repro.kernels.bucket_probe import _EMPTY, _resolve_interpret
+
+_LANE = 128
+
+
+def _fused_query_kernel(n_dims, has_delta, segs, *refs):
+    """Grid step: probe all dims for one fact block, mask, accumulate."""
+    fm_ref = refs[0]
+    out_ref = refs[-1]
+    dim_refs = refs[1:-1]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pb = fm_ref.shape[0]
+    mask = jnp.ones((pb,), jnp.bool_)
+    gk = jnp.zeros((pb,), jnp.int32)
+    off = 0
+    for d in range(n_dims):
+        width = 6 if has_delta[d] else 3
+        pk_ref, rk_ref, ra_ref = dim_refs[off:off + 3]
+        pk = pk_ref[...][:, 0]
+        match = rk_ref[...] == pk[:, None]
+        found = jnp.any(match, axis=1) & (pk != _EMPTY)
+        a = jnp.sum(jnp.where(match, ra_ref[...], 0), axis=1)
+        attr = jnp.where(found, a, -1)
+        if has_delta[d]:
+            dpk_ref, drk_ref, dra_ref = dim_refs[off + 3:off + 6]
+            dpk = dpk_ref[...][:, 0]
+            dmatch = drk_ref[...] == dpk[:, None]
+            dhit = jnp.any(dmatch, axis=1) & (dpk != _EMPTY)
+            da = jnp.sum(jnp.where(dmatch, dra_ref[...], 0), axis=1)
+            attr = jnp.where(dhit, da, attr)
+        mask &= (attr >= 0) & ((attr & 1) == 1)
+        gk += jnp.where(attr >= 0, attr >> 1, 0)
+        off += width
+    contrib = jnp.where(mask, fm_ref[...][:, 0], 0)
+    seg = jnp.where(mask, gk, 0)
+    out_ref[0, :] += jax.ops.segment_sum(contrib, seg, num_segments=segs)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "block_pb", "interpret"))
+def fused_query(dim_operands, fmeasure, *, num_segments: int,
+                block_pb: int = 256, interpret: bool | None = None):
+    """One-launch SSB query: ``(total, groups)`` from raw probe operands.
+
+    dim_operands -- tuple of per-dimension tuples, ``(pk, rows_k, rows_a)``
+        or ``(pk, rows_k, rows_a, dpk, drows_k, drows_a)`` with a live
+        delta (presence is static via tuple length).  ``pk`` (m,) are
+        dictionary codes, ``dpk`` (m,) raw fact keys; ``rows_*`` (m, W)
+        the gathered comparator/attribute planes.
+    fmeasure -- (m,) int32 measure, already fact-filter-masked to 0.
+    num_segments -- composite group-key space size.
+
+    Returns ``total`` () and ``groups`` (num_segments,) int32.  VMEM note:
+    the output block is (1, ceil(num_segments/128)*128) int32 and resident
+    across the whole grid — group spaces beyond ~1M keys approach the VMEM
+    ceiling on real TPUs; the planner gates those onto the composed path.
+    """
+    interpret = _resolve_interpret(interpret)
+    m = fmeasure.shape[0]
+    pb = min(block_pb, max(8, m))
+    pad = (-m) % pb
+    segs = max(_LANE, -(-num_segments // _LANE) * _LANE)
+    has_delta = tuple(len(ops) == 6 for ops in dim_operands)
+
+    fm = jnp.pad(fmeasure.astype(jnp.int32), (0, pad))[:, None]
+    operands = [fm]
+    in_specs = [pl.BlockSpec((pb, 1), lambda i: (i, 0))]
+
+    def _key_col(k):
+        return jnp.pad(k.astype(jnp.int32), (0, pad),
+                       constant_values=int(EMPTY_KEY))[:, None]
+
+    def _plane(p, fill=0):
+        return jnp.pad(p.astype(jnp.int32), ((0, pad), (0, 0)),
+                       constant_values=fill)
+
+    for ops in dim_operands:
+        pk, rk, ra = ops[:3]
+        w = rk.shape[1]
+        operands += [_key_col(pk), _plane(rk, int(EMPTY_KEY)), _plane(ra)]
+        in_specs += [pl.BlockSpec((pb, 1), lambda i: (i, 0)),
+                     pl.BlockSpec((pb, w), lambda i: (i, 0)),
+                     pl.BlockSpec((pb, w), lambda i: (i, 0))]
+        if len(ops) == 6:
+            dpk, drk, dra = ops[3:]
+            dw = drk.shape[1]
+            operands += [_key_col(dpk), _plane(drk, int(EMPTY_KEY)),
+                         _plane(dra)]
+            in_specs += [pl.BlockSpec((pb, 1), lambda i: (i, 0)),
+                         pl.BlockSpec((pb, dw), lambda i: (i, 0)),
+                         pl.BlockSpec((pb, dw), lambda i: (i, 0))]
+
+    grid = ((m + pad) // pb,)
+    kernel = functools.partial(_fused_query_kernel,
+                               len(dim_operands), has_delta, segs)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        # every grid step accumulates into the same (1, segs) block
+        out_specs=pl.BlockSpec((1, segs), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, segs), jnp.int32),
+        interpret=interpret,
+        name="jspim_fused_query",
+    )(*operands)
+    groups = out[0, :num_segments]
+    return groups.sum(), groups

@@ -5,15 +5,26 @@ the LM integration: it picks the gathered (XLA row gather + fused Pallas
 comparator) schedule by default, and the faithful streaming schedule
 (per-probe DMA row activation) on request.  On CPU the kernels run in
 interpret mode; on TPU compiled.
+
+The module also hosts the **kernel registry** (``KERNEL_REGISTRY``): every
+Pallas kernel registers its entry point, its pure-jnp interpret-mode
+reference, the backends with a compiled lowering, and a deterministic case
+generator — so the planner, the serving circuit breaker, and the parity
+suite enumerate kernels instead of hard-coding them.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.delta import TOMBSTONE, DeltaTable
 from repro.core.hash_table import JSPIMTable, hash_bucket
 from repro.core.lookup import ProbeResult
 from repro.kernels import bucket_probe, ref
+from repro.kernels.fused_query import fused_query as _fused_query
 
 
 def probe_table(table: JSPIMTable, probe_keys: jax.Array, *,
@@ -96,3 +107,230 @@ def probe_table_ref(table: JSPIMTable, probe_keys: jax.Array) -> ProbeResult:
     words = ref.bucket_probe_ref(table.keys, table.values, keys, bids)
     found, payload, is_dup = ref.unpack_words(words)
     return ProbeResult(found, payload, is_dup)
+
+
+def delta_slot_words(delta: DeltaTable, dim_mask: jax.Array) -> jax.Array:
+    """Fold a dimension predicate into the delta's value-word plane.
+
+    Per delta slot: a live payload that passes ``dim_mask`` keeps its packed
+    word; a filtered-out payload and a tombstone both become NULL_WORD, so
+    the delta-aware kernel's "delta hit overrides" rule needs no separate
+    tombstone or predicate branch.  Returns (num_buckets, bucket_width)
+    int32, the predicate-folded ``drows_w`` operand.
+    """
+    payload = delta.words >> 1
+    is_tomb = delta.words == TOMBSTONE
+    n = dim_mask.shape[0]
+    ok = (dim_mask[jnp.clip(payload, 0, n - 1)]
+          & (payload >= 0) & (payload < n))
+    return jnp.where(~is_tomb & ok, delta.words,
+                     ref.NULL_WORD).astype(jnp.int32)
+
+
+def probe_table_filtered_delta(table: JSPIMTable, probe_keys: jax.Array,
+                               slot_pred: jax.Array, delta: DeltaTable,
+                               raw_keys: jax.Array, delta_words: jax.Array, *,
+                               block_pb: int = 256,
+                               interpret: bool | None = None) -> ProbeResult:
+    """Delta-aware fused associative search + dimension filter.
+
+    Same contract as ``probe_table_filtered`` but correct on live engines:
+    the delta bucket rows (raw-key comparator plane + the predicate-folded
+    ``delta_words`` from ``delta_slot_words``) ride into the kernel grid,
+    so upserts, deletes, and filtered delta rows all resolve in the same
+    VMEM pass — no post-filter fallback.
+    """
+    keys = probe_keys.astype(jnp.int32)
+    bids = hash_bucket(keys, table.num_buckets, table.hash_mode)
+    rows_k = table.keys[bids]
+    rows_v = table.values[bids]
+    rows_p = slot_pred[bids]
+    raw = raw_keys.astype(jnp.int32)
+    dbids = hash_bucket(raw, delta.num_buckets, delta.hash_mode)
+    drows_k = delta.keys[dbids]
+    drows_w = delta_words[dbids]
+    words = bucket_probe.probe_filter_rows_delta(
+        keys, rows_k, rows_v, rows_p, raw, drows_k, drows_w,
+        block_pb=block_pb, interpret=interpret)
+    found, payload, is_dup = ref.unpack_words(words)
+    return ProbeResult(found, payload, is_dup)
+
+
+# --------------------------------------------------------------------------
+# Kernel registry
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelOp:
+    """One registered kernel: entry point + oracle + backend support.
+
+    ``fn(*args, **kwargs, interpret=...)`` must be bit-identical to
+    ``ref_fn(*args, **kwargs)`` on every case ``make_cases`` yields —
+    that contract is what the registry-driven parity suite enforces.
+    ``backends`` lists backends with a *compiled* lowering; interpret
+    mode runs everywhere.  ``make_cases() -> [(name, args, kwargs)]``
+    must be deterministic (seeded) so parity failures reproduce.
+    """
+
+    name: str
+    fn: Callable
+    ref_fn: Callable
+    backends: tuple[str, ...]
+    make_cases: Callable[[], list]
+
+
+KERNEL_REGISTRY: dict[str, KernelOp] = {}
+
+
+def register_kernel(op: KernelOp) -> KernelOp:
+    if op.name in KERNEL_REGISTRY:
+        raise ValueError(f"kernel {op.name!r} already registered")
+    KERNEL_REGISTRY[op.name] = op
+    return op
+
+
+def kernel_supported(name: str, backend: str) -> bool:
+    """True when ``name`` has a compiled lowering on ``backend`` (unknown
+    kernels report False so callers degrade instead of crashing)."""
+    op = KERNEL_REGISTRY.get(name)
+    return op is not None and backend in op.backends
+
+
+def _probe_cases():
+    """Deterministic probe-kernel operand sets: hit/miss mix over a small
+    identity-hashed table, exercised at a non-multiple-of-block size."""
+    import numpy as np
+    from repro.core.hash_table import EMPTY_KEY, build_table
+
+    rng = np.random.default_rng(7)
+    n, m = 64, 83
+    keys = np.arange(n, dtype=np.int32) * 3
+    payloads = rng.integers(0, 1 << 20, n).astype(np.int32)
+    table = build_table(jnp.asarray(keys), jnp.asarray(payloads),
+                        num_buckets=32, bucket_width=8,
+                        hash_mode="fibonacci")
+    pk = rng.choice(keys, m).astype(np.int32)
+    pk[::7] = 10_001  # guaranteed misses (not a multiple of 3)
+    pk[5] = int(EMPTY_KEY)
+    bids = hash_bucket(jnp.asarray(pk), table.num_buckets, table.hash_mode)
+    rows_k = table.keys[bids]
+    rows_v = table.values[bids]
+    return table, jnp.asarray(pk), bids, rows_k, rows_v
+
+
+def _probe_rows_cases():
+    _, pk, _, rows_k, rows_v = _probe_cases()
+    return [("hit_miss_mix", (pk, rows_k, rows_v), {})]
+
+
+def _stream_cases():
+    table, pk, bids, _, _ = _probe_cases()
+    return [("hit_miss_mix", (table.keys, table.values, pk, bids), {})]
+
+
+def _filter_cases():
+    table, pk, bids, rows_k, rows_v = _probe_cases()
+    n_rows = 64
+    import numpy as np
+    mask = jnp.asarray((np.arange(n_rows) % 3 == 0))
+    rows_p = slot_predicate(table, mask)[bids]
+    return [("pred_mix", (pk, rows_k, rows_v, rows_p), {})]
+
+
+def _delta_states():
+    """(state_name, delta) across the empty / live / tombstone axis."""
+    from repro.core.delta import delete_batch, empty_delta, upsert_batch
+
+    empty = empty_delta(16, 8, hash_mode="fibonacci")
+    live = upsert_batch(empty, jnp.asarray([3, 9, 10_001], jnp.int32),
+                        jnp.asarray([7, 1, 40], jnp.int32))
+    tomb = delete_batch(live, jnp.asarray([9, 30], jnp.int32))
+    return [("delta_empty", empty), ("delta_live", live),
+            ("delta_tombstone", tomb)]
+
+
+def _filter_delta_cases():
+    import numpy as np
+    table, pk, bids, rows_k, rows_v = _probe_cases()
+    mask = jnp.asarray((np.arange(64) % 3 == 0))
+    rows_p = slot_predicate(table, mask)[bids]
+    raw = pk  # identity dictionary in the case tables: raw key == code key
+    cases = []
+    for state, delta in _delta_states():
+        dwords = delta_slot_words(delta, mask)
+        dbids = hash_bucket(raw, delta.num_buckets, delta.hash_mode)
+        cases.append((state, (pk, rows_k, rows_v, rows_p,
+                              raw, delta.keys[dbids], dwords[dbids]), {}))
+    return cases
+
+
+def _fused_query_cases():
+    import numpy as np
+    table, pk, bids, rows_k, rows_v = _probe_cases()
+    rng = np.random.default_rng(11)
+    n_rows, card = 64, 5
+    mask = jnp.asarray((np.arange(n_rows) % 3 == 0))
+    gcol = jnp.asarray(rng.integers(0, card, n_rows).astype(np.int32))
+    payload = table.values >> 1
+    is_dup = (table.values & 1) == 1
+    valid = (payload >= 0) & (payload < n_rows) & ~is_dup
+    clip = jnp.clip(payload, 0, n_rows - 1)
+    attr = jnp.where(
+        valid,
+        ((gcol[clip] % card) << 1) | mask[clip].astype(jnp.int32),
+        jnp.int32(-1))
+    rows_a = attr[bids]
+    fmeasure = jnp.asarray(
+        rng.integers(0, 1000, pk.shape[0]).astype(np.int32))
+    cases = [("no_delta", (((pk, rows_k, rows_a),), fmeasure),
+              {"num_segments": card})]
+    for state, delta in _delta_states():
+        dpayload = delta.words >> 1
+        dtomb = delta.words == TOMBSTONE
+        dvalid = ~dtomb & (dpayload >= 0) & (dpayload < n_rows)
+        dclip = jnp.clip(dpayload, 0, n_rows - 1)
+        dattr = jnp.where(
+            dvalid,
+            ((gcol[dclip] % card) << 1) | mask[dclip].astype(jnp.int32),
+            jnp.int32(-1))
+        dbids = hash_bucket(pk, delta.num_buckets, delta.hash_mode)
+        dim_ops = ((pk, rows_k, rows_a,
+                    pk, delta.keys[dbids], dattr[dbids]),)
+        cases.append((state, (dim_ops, fmeasure), {"num_segments": card}))
+    return cases
+
+
+def _coalesce_cases():
+    import numpy as np
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(rng.integers(0, 9, 100).astype(np.int32))
+    return [("dup_stream", (keys,), {})]
+
+
+def _coalesce_fn(keys, *, interpret=None):
+    from repro.kernels.coalesce_window import coalesce_window_mask
+    return coalesce_window_mask(
+        keys, interpret=True if interpret is None else interpret)
+
+
+def _coalesce_ref(keys):
+    from repro.core.dedup import windowed_coalesce_mask
+    return windowed_coalesce_mask(keys, window=8)
+
+
+register_kernel(KernelOp("probe_rows", bucket_probe.probe_rows,
+                         ref.probe_rows_ref, ("tpu",), _probe_rows_cases))
+register_kernel(KernelOp("bucket_probe_stream",
+                         bucket_probe.bucket_probe_stream,
+                         ref.bucket_probe_ref, ("tpu",), _stream_cases))
+register_kernel(KernelOp("probe_filter_rows", bucket_probe.probe_filter_rows,
+                         ref.probe_filter_rows_ref, ("tpu",), _filter_cases))
+register_kernel(KernelOp("probe_filter_rows_delta",
+                         bucket_probe.probe_filter_rows_delta,
+                         ref.probe_filter_rows_delta_ref, ("tpu",),
+                         _filter_delta_cases))
+register_kernel(KernelOp("fused_query", _fused_query,
+                         ref.fused_query_ref, ("tpu",), _fused_query_cases))
+register_kernel(KernelOp("coalesce_window_mask", _coalesce_fn,
+                         _coalesce_ref, ("tpu",), _coalesce_cases))

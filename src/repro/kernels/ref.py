@@ -1,6 +1,7 @@
 """Pure-jnp oracles for the Pallas kernels (the correctness contract)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.hash_table import EMPTY_KEY
@@ -44,6 +45,58 @@ def probe_filter_rows_ref(probe_keys, rows_k, rows_v, rows_p):
     word = jnp.sum(jnp.where(match, rows_v, 0), axis=1).astype(jnp.int32)
     pred = jnp.sum(jnp.where(match, rows_p, 0), axis=1) > 0
     return jnp.where(found & pred, word, NULL_WORD)
+
+
+def probe_filter_rows_delta_ref(probe_keys, rows_k, rows_v, rows_p,
+                                delta_keys, drows_k, drows_w):
+    """Delta-aware fused probe+predicate semantics (§3.2.3 + §4.1.5).
+
+    The main probe is ``probe_filter_rows_ref``; the delta overlay probes
+    the *raw* fact keys against the delta bucket rows and overrides the
+    main word on any hit.  ``drows_w`` is predicate-folded: tombstones and
+    filtered-out delta payloads already carry NULL_WORD, so a delta hit on
+    either reads as a miss downstream.
+    """
+    main = probe_filter_rows_ref(probe_keys, rows_k, rows_v, rows_p)
+    dmatch = drows_k == delta_keys[:, None]
+    dhit = dmatch.any(axis=1) & (delta_keys != EMPTY_KEY)
+    dword = jnp.sum(jnp.where(dmatch, drows_w, 0), axis=1).astype(jnp.int32)
+    return jnp.where(dhit, dword, main)
+
+
+def fused_query_ref(dim_operands, fmeasure, *, num_segments: int):
+    """One-launch probe→filter→aggregate semantics (the mega-kernel oracle).
+
+    ``dim_operands`` is a tuple of per-dimension operand tuples — either
+    ``(pk, rows_k, rows_a)`` or, with a live delta,
+    ``(pk, rows_k, rows_a, dpk, drows_k, drows_a)`` — where ``rows_a`` is
+    the per-slot *attribute plane*: ``(group_key*stride << 1) | pred_bit``
+    for unique in-range payloads, ``-1`` for dups/invalid slots, and the
+    delta plane encodes tombstones as ``-1`` too.  ``fmeasure`` is the
+    fact-filter-masked measure column.  Returns ``(total, groups)``.
+    """
+    m = fmeasure.shape[0]
+    mask = jnp.ones((m,), bool)
+    gk = jnp.zeros((m,), jnp.int32)
+    for ops in dim_operands:
+        pk, rows_k, rows_a = ops[:3]
+        match = rows_k == pk[:, None]
+        found = match.any(axis=1) & (pk != EMPTY_KEY)
+        a = jnp.sum(jnp.where(match, rows_a, 0), axis=1).astype(jnp.int32)
+        attr = jnp.where(found, a, jnp.int32(-1))
+        if len(ops) == 6:
+            dpk, drows_k, drows_a = ops[3:]
+            dmatch = drows_k == dpk[:, None]
+            dhit = dmatch.any(axis=1) & (dpk != EMPTY_KEY)
+            da = jnp.sum(jnp.where(dmatch, drows_a, 0),
+                         axis=1).astype(jnp.int32)
+            attr = jnp.where(dhit, da, attr)
+        mask &= (attr >= 0) & ((attr & 1) == 1)
+        gk += jnp.where(attr >= 0, attr >> 1, 0)
+    contrib = jnp.where(mask, fmeasure.astype(jnp.int32), 0)
+    seg = jnp.where(mask, gk, 0)
+    groups = jax.ops.segment_sum(contrib, seg, num_segments=num_segments)
+    return groups.sum(), groups
 
 
 def unpack_words(words):

@@ -13,9 +13,15 @@ tail.  It is deliberately a *different* compiled program — a poisoned
 fused kernel (the chaos harness injects faults per code path) must not be
 re-entered by its own fallback.
 
-Both paths read only :class:`~repro.engine.queries._QueryRunner` surface
-(``probe_dim`` / ``tables``), so a :class:`~repro.engine.snapshot.
-EpochSnapshot` serves batches exactly like the head engine would.
+PR 8 adds the **mega** flavor: one dispatch folds the delta-aware probe
+*into* the batched program (no cached-probe dependency), the serving
+analogue of the engine's one-launch fused path.  The fallback ladder is
+mega → composed: a breaker opened by mega faults serves composed
+directly, never re-entering the poisoned one-launch program.
+
+All flavors read only :class:`~repro.engine.queries._QueryRunner` surface
+(``probe_dim`` / ``tables`` / ``indexes``), so a :class:`~repro.engine.
+snapshot.EpochSnapshot` serves batches exactly like the head engine would.
 """
 from __future__ import annotations
 
@@ -23,8 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.policy import ExecutionPolicy
 from repro.durability.faults import NULL_FAULTS
-from repro.engine.queries import SSB_QUERIES, _filter_aggregate
+from repro.engine.join import effective_index, lookup
+from repro.engine.queries import FACT_FK, SSB_QUERIES, _filter_aggregate
 from repro.serving.params import PARAM_QUERIES
 
 
@@ -44,9 +52,14 @@ class BatchRunner:
     and plans are unchanged; the epoch is never a jit key).
     """
 
-    def __init__(self):
+    def __init__(self, policy: ExecutionPolicy | None = None):
+        # the serving tier's ExecutionPolicy: fusion="mega" makes the
+        # one-launch flavor the default dispatch (the breaker still
+        # ladders down to composed); None keeps the pre-PR-8 batch default
+        self.policy = policy
         self._batch_programs: dict[str, object] = {}
         self._single_programs: dict[str, object] = {}
+        self._mega_programs: dict[str, object] = {}
 
     # -- compiled programs -------------------------------------------------
     def _batch_program(self, name: str):
@@ -62,6 +75,33 @@ class BatchRunner:
 
             prog = jax.jit(program)
             self._batch_programs[name] = prog
+        return prog
+
+    def _mega_program(self, name: str):
+        """One-launch batched program: delta-aware probe folded into the
+        dispatch.  Probes are parameter-independent (parameters bind only
+        filters and group keys), so they compute once per dispatch and the
+        vmapped tails share them — one launch serves the whole batch even
+        probe-cache-cold, and live deltas resolve inside the program."""
+        prog = self._mega_programs.get(name)
+        if prog is None:
+            pq = PARAM_QUERIES[name]
+            spec = SSB_QUERIES[name]
+
+            def program(fact_cols, dim_cols, indexes, params):
+                probes = {}
+                for dim in spec.joined_dims():
+                    pr = lookup(indexes[dim], fact_cols[FACT_FK[dim]])
+                    probes[dim] = (pr.found,
+                                   jnp.where(pr.found, pr.payload, -1))
+
+                def one(p):
+                    return _filter_aggregate(pq.bind(p), fact_cols,
+                                             dim_cols, probes)
+                return jax.vmap(one)(params)
+
+            prog = jax.jit(program)
+            self._mega_programs[name] = prog
         return prog
 
     def _single_program(self, name: str):
@@ -88,17 +128,35 @@ class BatchRunner:
         return fact_cols, dim_cols, probes
 
     # -- execution ---------------------------------------------------------
+    def _resolve_flavor(self, runner, flavor: str | None,
+                        composed: bool) -> str:
+        if flavor is None:
+            if composed:
+                return "composed"
+            if (self.policy is not None and self.policy.fusion == "mega"
+                    and getattr(runner, "mode", None) == "jspim"):
+                return "mega"
+            return "batch"
+        if flavor not in ("mega", "batch", "composed"):
+            raise ValueError(f"unknown serve flavor {flavor!r}")
+        if flavor == "mega" and getattr(runner, "mode", None) != "jspim":
+            return "batch"     # no indexes to fold the probe over
+        return flavor
+
     def run_batch(self, runner, name: str, params_list, *,
-                  composed: bool = False, faults=NULL_FAULTS
-                  ) -> list[tuple[int, np.ndarray]]:
+                  composed: bool = False, flavor: str | None = None,
+                  faults=NULL_FAULTS) -> list[tuple[int, np.ndarray]]:
         """Serve ``params_list`` against ``runner``; one (total, groups)
         per request, as host numpy.
 
-        ``composed=True`` routes through the per-request fallback
-        programs.  ``faults`` sees ``kernel_batch:{name}`` or
-        ``kernel_composed:{name}`` once per dispatch, *before* the kernel
-        runs — an injected crash poisons the whole batch, like a real
-        device fault would.
+        ``flavor`` picks the dispatch shape: "mega" (one launch, probe
+        folded in), "batch" (vmapped tail over cached probes), "composed"
+        (per-request fallback programs).  ``composed=True`` is the legacy
+        shim for flavor="composed"; with neither, the runner policy
+        decides.  ``faults`` sees ``kernel_mega:{name}`` /
+        ``kernel_batch:{name}`` / ``kernel_composed:{name}`` once per
+        dispatch, *before* the kernel runs — an injected crash poisons
+        the whole batch, like a real device fault would.
         """
         if not params_list:
             return []
@@ -108,8 +166,9 @@ class BatchRunner:
                 raise ValueError(
                     f"{name} takes {pq.n_params} params {pq.params}, "
                     f"got {len(p)}: {tuple(p)!r}")
-        fact_cols, dim_cols, probes = self._operands(runner, name)
-        if composed:
+        flavor = self._resolve_flavor(runner, flavor, composed)
+        if flavor == "composed":
+            fact_cols, dim_cols, probes = self._operands(runner, name)
             prog = self._single_program(name)
             out = []
             for p in params_list:
@@ -121,9 +180,21 @@ class BatchRunner:
         b = len(params_list)
         padded = list(params_list) + [params_list[-1]] * (_bucket(b) - b)
         params = jnp.asarray(np.asarray(padded, np.int32))
-        faults.hit(f"kernel_batch:{name}")
-        totals, groups = self._batch_program(name)(
-            fact_cols, dim_cols, probes, params)
+        if flavor == "mega":
+            spec = SSB_QUERIES[name]
+            fact_cols = dict(runner.tables["lineorder"].columns)
+            dim_cols = {d: dict(runner.tables[d].columns)
+                        for d in spec.joined_dims()}
+            idx = {d: effective_index(runner.indexes[d])
+                   for d in spec.joined_dims()}
+            faults.hit(f"kernel_mega:{name}")
+            totals, groups = self._mega_program(name)(
+                fact_cols, dim_cols, idx, params)
+        else:
+            fact_cols, dim_cols, probes = self._operands(runner, name)
+            faults.hit(f"kernel_batch:{name}")
+            totals, groups = self._batch_program(name)(
+                fact_cols, dim_cols, probes, params)
         totals = np.asarray(totals)
         groups = np.asarray(groups)
         return [(int(totals[i]), groups[i]) for i in range(b)]

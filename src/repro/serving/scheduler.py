@@ -190,7 +190,10 @@ class QueryScheduler:
         self.engine = engine
         self.config = config or ServeConfig()
         self.faults = faults
-        self.runner = BatchRunner()
+        # the engine's ExecutionPolicy decides the default serve flavor
+        # (fusion="mega" → one-launch dispatch); the breaker ladders any
+        # flavor down to composed and never re-enters a poisoned kernel
+        self.runner = BatchRunner(policy=getattr(engine, "policy", None))
         self.pool = WorkerPool(self.config.n_workers, faults)
         self._mu = threading.RLock()
         self._queue: list[_Item] = []
@@ -273,6 +276,8 @@ class QueryScheduler:
         engine — recovery never blackholes in-flight traffic."""
         with self._mu:
             self.engine = engine
+            self.runner.policy = getattr(engine, "policy",
+                                         self.runner.policy)
         self._refresh(force=True)
 
     def _lag(self, snap) -> int:

@@ -1,0 +1,415 @@
+"""PR 8: one-launch SSB — ExecutionPolicy, kernel registry, mega fusion.
+
+Four contracts under test:
+
+* **registry parity** — every kernel in ``KERNEL_REGISTRY`` is
+  bit-identical to its interpret-mode reference on every registered case
+  (schedules × delta states), so adding a kernel without an oracle or a
+  case set is impossible by construction;
+* **ExecutionPolicy** — the frozen policy object and the legacy
+  ``mode=``/``probe_impl=``/``schedule=`` shims construct identical
+  engines, and an explicit policy that *disagrees* with legacy kwargs is
+  an error, never a silent override;
+* **delta-aware fusion** — the mega path (suite program on XLA, fused
+  Pallas kernel on ``kernel="pallas"``) matches the composed pipeline
+  bit-exactly, including on live engines with buffered upserts and
+  tombstones, and an empty-but-present delta is stripped at the program
+  boundary so it neither retraces nor taxes the fused path;
+* **zero recompiles** — warm mega programs survive steady-state fact
+  appends and epoch-snapshot swaps without a single new lowering.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.delta import empty_delta
+from repro.core.planner import MAX_MEGA_SEGMENTS, plan_query
+from repro.core.policy import ExecutionPolicy, resolve_policy
+from repro.engine import SSB_QUERIES, SSBEngine, generate_ssb
+from repro.engine.join import effective_index, lookup_filtered
+from repro.kernels import KERNEL_REGISTRY, kernel_supported
+from repro.serving.batch import BatchRunner
+from repro.serving.params import PARAM_QUERIES
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return generate_ssb(sf=0.01, seed=0)
+
+
+def _ingest_part_delta(eng, seed=7):
+    """Buffered upserts (key remaps) + tombstones on the part dimension."""
+    rng = np.random.default_rng(seed)
+    pk = np.asarray(eng.tables["part"].columns["partkey"])
+    keys = pk[rng.choice(pk.size, 50, replace=False)].astype(np.int32)
+    rows = rng.integers(0, pk.size, 50).astype(np.int32)
+    eng.ingest("part", keys, rows, auto_compact=False)
+    eng.ingest("part", keys[:20], op="delete", auto_compact=False)
+    assert eng.indexes["part"].delta is not None
+
+
+# ---------------------------------------------------------------------------
+# registry-driven interpret parity: schedules x delta states
+# ---------------------------------------------------------------------------
+
+
+def _registry_params():
+    for op in KERNEL_REGISTRY.values():
+        for cname, args, kwargs in op.make_cases():
+            yield pytest.param(op, args, kwargs, id=f"{op.name}-{cname}")
+
+
+@pytest.mark.parametrize("op,args,kwargs", _registry_params())
+def test_kernel_registry_interpret_parity(op, args, kwargs):
+    got = op.fn(*args, **kwargs, interpret=True)
+    want = op.ref_fn(*args, **kwargs)
+    got_l = jax.tree_util.tree_leaves(got)
+    want_l = jax.tree_util.tree_leaves(want)
+    assert len(got_l) == len(want_l)
+    for g, w in zip(got_l, want_l):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=op.name)
+
+
+def test_registry_enumerates_every_kernel():
+    names = set(KERNEL_REGISTRY)
+    assert {"probe_rows", "bucket_probe_stream", "probe_filter_rows",
+            "probe_filter_rows_delta", "fused_query",
+            "coalesce_window_mask"} <= names
+    for op in KERNEL_REGISTRY.values():
+        assert op.make_cases(), f"{op.name} registered without cases"
+        assert op.backends, f"{op.name} registered without backends"
+
+
+def test_kernel_supported_gates_backends():
+    assert kernel_supported("fused_query", "tpu")
+    assert not kernel_supported("fused_query", "cpu")
+    assert not kernel_supported("no_such_kernel", "tpu")
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPolicy: one surface, legacy shims, loud conflicts
+# ---------------------------------------------------------------------------
+
+
+def test_policy_frozen_hashable_validated():
+    p = ExecutionPolicy(kernel="pallas", schedule="stream")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        p.kernel = "xla"
+    assert p.replace(fusion="mega").fusion == "mega"
+    assert p.replace(fusion="mega") != p
+    assert {p: 1}[ExecutionPolicy(kernel="pallas", schedule="stream")] == 1
+    for bad in (dict(mode="xla"), dict(kernel="cuda"),
+                dict(schedule="bogus"), dict(fusion="hyper")):
+        with pytest.raises(ValueError):
+            ExecutionPolicy(**bad)
+
+
+def test_resolve_policy_legacy_shims_and_conflicts():
+    assert resolve_policy() == ExecutionPolicy()
+    assert resolve_policy(mode="baseline", probe_impl="pallas",
+                          schedule="stream") == ExecutionPolicy(
+        mode="baseline", kernel="pallas", schedule="stream")
+    pol = ExecutionPolicy(kernel="pallas")
+    assert resolve_policy(pol, probe_impl="pallas") is pol  # agreement OK
+    with pytest.raises(ValueError, match="conflicts"):
+        resolve_policy(pol, probe_impl="xla")
+
+
+def test_engine_policy_equals_legacy_kwargs(tables):
+    legacy = SSBEngine(dict(tables), "jspim", "pallas", schedule="stream")
+    pol = SSBEngine(dict(tables), policy=ExecutionPolicy(
+        mode="jspim", kernel="pallas", schedule="stream"))
+    assert legacy.policy == pol.policy
+    assert (legacy.mode, legacy.probe_impl, legacy.schedule) == \
+        ("jspim", "pallas", "stream")
+    with pytest.raises(ValueError, match="conflicts"):
+        SSBEngine(dict(tables), "baseline",
+                  policy=ExecutionPolicy(mode="jspim"))
+    with pytest.raises(AttributeError):
+        legacy.mode = "baseline"   # read-only view of the frozen policy
+
+
+def test_snapshot_inherits_policy(tables):
+    eng = SSBEngine(dict(tables), policy=ExecutionPolicy(fusion="mega"))
+    with eng.snapshot() as snap:
+        assert snap.policy is eng.policy
+        assert snap.mode == "jspim"
+
+
+# ---------------------------------------------------------------------------
+# empty-but-present delta: stripped at the program boundary
+# ---------------------------------------------------------------------------
+
+
+def test_effective_index_strips_empty_delta(tables):
+    eng = SSBEngine(dict(tables))
+    idx = eng.indexes["part"]
+    assert idx.delta is None
+    assert effective_index(idx) is idx
+    hollow = dataclasses.replace(
+        idx, delta=empty_delta(idx.table.num_buckets,
+                               hash_mode=idx.table.hash_mode))
+    assert effective_index(hollow).delta is None
+    # under a trace the occupancy is unknowable: structure passes through
+    probe = jax.jit(lambda i: jnp.int32(effective_index(i).delta is None))
+    assert int(probe(hollow)) == 0
+    # a genuinely live delta survives the host-side strip too
+    _ingest_part_delta(eng)
+    live = eng.indexes["part"]
+    assert effective_index(live) is live
+
+
+def test_lookup_filtered_empty_delta_keeps_fused_path(tables):
+    eng = SSBEngine(dict(tables))
+    idx = eng.indexes["part"]
+    fk = eng.tables["lineorder"].columns["partkey"]
+    n = eng.tables["part"].n_rows
+    mask = jnp.asarray(np.arange(n) % 4 == 0)
+    hollow = dataclasses.replace(
+        idx, delta=empty_delta(idx.table.num_buckets,
+                               hash_mode=idx.table.hash_mode))
+    for impl in ("xla", "pallas"):
+        base = lookup_filtered(idx, fk, mask, impl=impl)
+        got = lookup_filtered(hollow, fk, mask, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got.found),
+                                      np.asarray(base.found))
+        np.testing.assert_array_equal(
+            np.asarray(jnp.where(got.found, got.payload, -1)),
+            np.asarray(jnp.where(base.found, base.payload, -1)))
+
+
+def test_lookup_filtered_pallas_live_delta_matches_xla(tables):
+    eng = SSBEngine(dict(tables))
+    _ingest_part_delta(eng)
+    idx = eng.indexes["part"]
+    fk = eng.tables["lineorder"].columns["partkey"]
+    n = eng.tables["part"].n_rows
+    mask = jnp.asarray(np.arange(n) % 4 == 0)
+    want = lookup_filtered(idx, fk, mask, impl="xla")
+    got = lookup_filtered(idx, fk, mask, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(got.found),
+                                  np.asarray(want.found))
+    np.testing.assert_array_equal(
+        np.asarray(jnp.where(got.found, got.payload, -1)),
+        np.asarray(jnp.where(want.found, want.payload, -1)))
+
+
+# ---------------------------------------------------------------------------
+# mega vs composed: bit-identity, clean and live-delta engines
+# ---------------------------------------------------------------------------
+
+
+def _assert_runs_equal(got, want):
+    assert set(got) == set(want)
+    for name in want:
+        gt, gg = got[name]
+        wt, wg = want[name]
+        assert int(gt) == int(wt), name
+        np.testing.assert_array_equal(np.asarray(gg), np.asarray(wg),
+                                      err_msg=name)
+
+
+def test_run_all_mega_matches_composed(tables):
+    eng = SSBEngine(dict(tables))
+    mega = eng.run_all(fusion="mega")
+    composed = eng.run_all(fusion="composed")
+    _assert_runs_equal(mega, composed)
+    auto = eng.run_all()
+    _assert_runs_equal(auto, composed)
+
+
+def test_run_all_mega_matches_composed_live_delta(tables):
+    eng = SSBEngine(dict(tables))
+    oracle = SSBEngine(dict(tables))
+    _ingest_part_delta(eng)
+    _ingest_part_delta(oracle)
+    _assert_runs_equal(eng.run_all(fusion="mega"),
+                       oracle.run_all(fusion="composed"))
+
+
+def test_run_all_one_launch_matches_composed(tables):
+    # cache-cold mega: probes folded into the single launch (the flavor
+    # BENCH_ssb.json's fusion section measures), vs the composed
+    # per-query probe→tail programs
+    eng = SSBEngine(dict(tables))
+    mega = eng.run_all(fusion="mega", use_cache=False)
+    composed = eng.run_all(fusion="composed", use_cache=False)
+    _assert_runs_equal(mega, composed)
+
+
+def test_run_all_one_launch_matches_composed_live_delta(tables):
+    eng = SSBEngine(dict(tables))
+    oracle = SSBEngine(dict(tables))
+    _ingest_part_delta(eng)
+    _ingest_part_delta(oracle)
+    _assert_runs_equal(
+        eng.run_all(fusion="mega", use_cache=False),
+        oracle.run_all(fusion="composed", use_cache=False))
+
+
+@pytest.mark.parametrize("name", ["Q1.1", "Q2.1", "Q4.3"])
+def test_pallas_mega_kernel_matches_composed(tables, name):
+    eng = SSBEngine(dict(tables), policy=ExecutionPolicy(
+        kernel="pallas", fusion="mega"))
+    _ingest_part_delta(eng)
+    oracle = SSBEngine(dict(tables))
+    _ingest_part_delta(oracle)
+    got = eng.run(name)                       # policy: one-launch Pallas
+    want = oracle.run(name, fusion="composed")
+    assert int(got[0]) == int(want[0])
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def test_plan_query_gates():
+    forced = plan_query(10_000, force="mega")
+    assert forced.fusion == "mega" and forced.reason == "forced"
+    interp = plan_query(10_000, backend="cpu", kernel="pallas")
+    assert interp.fusion == "composed" and interp.reason == "interpret"
+    vmem = plan_query(10_000, num_segments=MAX_MEGA_SEGMENTS + 1)
+    assert vmem.fusion == "composed" and vmem.reason == "vmem"
+    modeled = plan_query(6_000_000, n_queries=13, backend="cpu",
+                         kernel="xla")
+    assert modeled.fusion == "mega" and modeled.reason == "modeled"
+    assert modeled.modeled_speedup > 1.0
+
+
+# ---------------------------------------------------------------------------
+# zero recompiles: mega programs across appends and epoch swaps
+# ---------------------------------------------------------------------------
+
+
+def test_mega_zero_recompiles_across_epochs(tables, rng, fact_batch,
+                                            count_lowerings):
+    eng = SSBEngine(dict(tables), policy=ExecutionPolicy(fusion="mega"))
+    eng.warm_cache()
+    names = ("Q1.1", "Q2.1", "Q4.1")
+    b = 100
+
+    def append(i):
+        return eng.append_fact_rows(
+            fact_batch(eng.tables, rng, b, 60_000_000 + i * b))
+
+    def headroom():
+        info = eng.fact_append_info()
+        return info["n_physical"] - info["n_valid"]
+
+    # warmup mirrors test_epoch_swaps_zero_recompiles: guarantee capacity
+    # headroom, pin the skew remeasure, then warm every program flavor the
+    # measured loop touches (pinned-copy and donated appends, suite
+    # programs on engine and snapshot, Pallas-free mega-on-XLA run_all)
+    i = 0
+    while headroom() < 16 * b + 256:
+        append(i)
+        i += 1
+    eng._maybe_replan_fact_skew(force=True)
+    warm = eng.snapshot()
+    warm.run_all(list(names), fusion="mega")
+    warm.run_all(list(names), fusion="mega", use_cache=False)
+    append(100)
+    eng.run_all(list(names), fusion="mega")
+    eng.run_all(list(names), fusion="mega", use_cache=False)
+    append(101)
+    append(102)
+    warm.release()
+    eng.run_all(list(names), fusion="mega")
+    eng.run_all(list(names), fusion="mega", use_cache=False)
+
+    with count_lowerings() as count:
+        for i in range(3):
+            snap = eng.snapshot()
+            rep = append(200 + i)
+            assert not rep["capacity_grew"]
+            snap.run_all(list(names), fusion="mega")   # old epoch
+            eng.run_all(list(names), fusion="mega")    # head epoch
+            # the one-launch flavor (probes inside) must be epoch-stable too
+            eng.run_all(list(names), fusion="mega", use_cache=False)
+            assert snap.epoch < eng.epoch
+            snap.release()
+    assert count[0] == 0, \
+        f"mega epoch swaps lowered {count[0]} modules (epoch or delta " \
+        "structure leaked into a jit key or an uncompiled program flavor)"
+
+
+# ---------------------------------------------------------------------------
+# serving: policy-driven mega flavor + breaker ladder
+# ---------------------------------------------------------------------------
+
+
+def test_batch_runner_mega_flavor_matches_oracle(tables):
+    pol = ExecutionPolicy(fusion="mega")
+    eng = SSBEngine(dict(tables), policy=pol)
+    oracle = SSBEngine(dict(tables))
+    _ingest_part_delta(eng)
+    _ingest_part_delta(oracle)
+    runner = BatchRunner(policy=pol)
+    for name in ("Q1.1", "Q2.1"):
+        d = PARAM_QUERIES[name].defaults
+        params = [d, d]
+        assert runner._resolve_flavor(eng, None, False) == "mega"
+        mega = runner.run_batch(eng, name, params)
+        want = BatchRunner().run_batch(oracle, name, params, composed=True)
+        for (gt, gg), (wt, wg) in zip(mega, want):
+            assert gt == wt, name
+            np.testing.assert_array_equal(gg, wg, err_msg=name)
+
+
+def test_batch_runner_flavor_resolution(tables):
+    eng = SSBEngine(dict(tables))
+    base = SSBEngine(dict(tables), mode="baseline")
+    plain = BatchRunner()
+    assert plain._resolve_flavor(eng, None, False) == "batch"
+    assert plain._resolve_flavor(eng, None, True) == "composed"
+    mega = BatchRunner(policy=ExecutionPolicy(fusion="mega"))
+    assert mega._resolve_flavor(eng, None, False) == "mega"
+    assert mega._resolve_flavor(eng, None, True) == "composed"  # breaker wins
+    # no hash indexes to fold the probe over -> quietly a batch dispatch
+    assert mega._resolve_flavor(base, "mega", False) == "batch"
+    with pytest.raises(ValueError, match="flavor"):
+        plain._resolve_flavor(eng, "hyper", False)
+
+
+def test_scheduler_breaker_ladders_mega_to_composed(tables):
+    from repro.durability.faults import CrashPoint, FaultRegistry
+    from repro.serving.scheduler import QueryScheduler, ServeConfig
+
+    pol = ExecutionPolicy(fusion="mega")
+    eng = SSBEngine(dict(tables), policy=pol)
+    oracle = SSBEngine(dict(tables))
+
+    faults = FaultRegistry()
+    seen = {"n": 0}
+
+    def kill_first_three(site):
+        seen["n"] += 1
+        if seen["n"] <= 3:
+            raise CrashPoint(f"kill at {site}")
+
+    faults.on("kernel_mega:Q1.1", kill_first_three)
+    sched = QueryScheduler(eng, ServeConfig(breaker_threshold=3,
+                                            breaker_cooldown=4,
+                                            max_retries=0), faults=faults)
+    try:
+        for _ in range(3):
+            t = sched.submit("Q1.1")
+            sched.pump(1)
+            assert t.wait(5).status == "failed"
+        assert sched._breakers["Q1.1"].open
+        assert faults.hits["kernel_mega:Q1.1"] == 3
+        good = sched.submit("Q1.1")
+        sched.pump(1)
+        r = good.wait(5)
+        assert r.ok and r.degraded
+        # the poisoned one-launch program was never re-entered
+        assert faults.hits["kernel_mega:Q1.1"] == 3
+        assert faults.hits["kernel_composed:Q1.1"] >= 1
+        want = BatchRunner().run_batch(
+            oracle, "Q1.1", [tuple(int(x) for x in r.params)],
+            composed=True)[0]
+        assert r.total == want[0]
+        np.testing.assert_array_equal(r.groups, want[1])
+    finally:
+        sched.close()

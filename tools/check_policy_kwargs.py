@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""AST lint: no new ad-hoc execution-knob kwargs outside ExecutionPolicy.
+
+PR 8 collapsed the scattered ``schedule=`` / ``probe_impl=`` knobs into
+``repro.core.policy.ExecutionPolicy``.  This check walks every function
+definition under ``src/repro`` and fails if one grows a ``schedule`` or
+``probe_impl`` parameter that is not on the allowlist below — the
+allowlist is exactly the surface that legitimately still takes the knob:
+the policy resolver itself, the legacy shims kept for compatibility
+(engine constructor, durability open/build), and the kernel/planner
+internals *below* the policy layer, where the knob is an explicit operand
+rather than an ambient setting.
+
+Run from the repo root: ``python tools/check_policy_kwargs.py``.
+Exit 0 when clean; exit 1 listing every violation as ``file:line``.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+KNOBS = ("schedule", "probe_impl")
+
+# (path relative to repo root, function name, knob) triples that predate —
+# or implement — the ExecutionPolicy surface.  Adding to this list is a
+# deliberate API decision; a new entry should almost always be a policy
+# field instead.
+ALLOWLIST = {
+    # the policy surface itself + legacy shims
+    ("src/repro/core/policy.py", "resolve_policy", "schedule"),
+    ("src/repro/core/policy.py", "resolve_policy", "probe_impl"),
+    ("src/repro/engine/queries.py", "__init__", "schedule"),
+    ("src/repro/engine/queries.py", "__init__", "probe_impl"),
+    ("src/repro/durability/manager.py", "open_engine", "schedule"),
+    ("src/repro/durability/manager.py", "open_engine", "probe_impl"),
+    ("src/repro/durability/state.py", "build_engine_from_state",
+     "schedule"),
+    ("src/repro/durability/state.py", "build_engine_from_state",
+     "probe_impl"),
+    # below the policy layer: the knob is an explicit per-call operand
+    ("src/repro/engine/join.py", "lookup", "schedule"),
+    ("src/repro/kernels/ops.py", "probe_table", "schedule"),
+    ("src/repro/core/lookup.py", "probe_with_delta", "schedule"),
+    ("src/repro/core/costmodel.py", "probe_schedule_seconds", "schedule"),
+    ("src/repro/core/costmodel.py", "tail_extend_seconds", "schedule"),
+    ("src/repro/core/planner.py", "est", "schedule"),
+}
+
+
+def check(root: pathlib.Path) -> list[str]:
+    violations = []
+    for path in sorted((root / "src" / "repro").rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        tree = ast.parse(path.read_text(), filename=rel)
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            args = node.args
+            names = [a.arg for a in
+                     args.posonlyargs + args.args + args.kwonlyargs]
+            for knob in KNOBS:
+                if knob in names and \
+                        (rel, node.name, knob) not in ALLOWLIST:
+                    violations.append(
+                        f"{rel}:{node.lineno}: {node.name}() takes "
+                        f"{knob}= — make it an ExecutionPolicy field "
+                        f"(or allowlist it in tools/check_policy_kwargs"
+                        f".py if it is genuinely below the policy layer)")
+    return violations
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    violations = check(root)
+    for v in violations:
+        print(v, file=sys.stderr)
+    if violations:
+        print(f"{len(violations)} ad-hoc execution-knob kwarg(s); see "
+              "ExecutionPolicy (src/repro/core/policy.py)",
+              file=sys.stderr)
+        return 1
+    print("policy-kwargs lint clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
