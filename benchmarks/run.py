@@ -13,15 +13,16 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (fig08_join_speedup, ingest_sweep, lm_integration,
-                            mvcc_serve, paper_tables, serve_latency,
-                            skew_sweep, ssb_pipeline, wal_replay)
+    from benchmarks import (fig08_join_speedup, ingest_sweep, ivm_maintain,
+                            lm_integration, mvcc_serve, paper_tables,
+                            serve_latency, skew_sweep, ssb_pipeline,
+                            wal_replay)
 
     print("name,us_per_call,derived")
     bad = 0
     for mod in (fig08_join_speedup, paper_tables, ssb_pipeline,
-                skew_sweep, ingest_sweep, mvcc_serve, wal_replay,
-                lm_integration, serve_latency):
+                skew_sweep, ingest_sweep, mvcc_serve, ivm_maintain,
+                wal_replay, lm_integration, serve_latency):
         try:
             for name, us, derived in mod.run():
                 print(f"{name},{us:.1f},{derived}")

@@ -15,6 +15,7 @@ from repro.core.delta import (TOMBSTONE, DeltaStats, DeltaTable, apply_batch,
                               delete_batch, delta_entries, delta_lookup,
                               delta_stats, empty_delta, insert_batch,
                               merge_entries, suggest_delta_buckets,
+                              weighted_entries,
                               upsert_batch)
 from repro.core.hash_table import (EMPTY_KEY, HASH_FIBONACCI, HASH_IDENTITY,
                                    JSPIMTable, build_table, entry_update,
@@ -42,6 +43,7 @@ __all__ = [
     "TOMBSTONE", "DeltaStats", "DeltaTable", "apply_batch", "delete_batch",
     "delta_entries", "delta_lookup", "delta_stats", "empty_delta",
     "insert_batch", "merge_entries", "suggest_delta_buckets", "upsert_batch",
+    "weighted_entries",
     "EMPTY_KEY", "HASH_FIBONACCI", "HASH_IDENTITY",
     "JSPIMTable", "build_table", "entry_update", "hash_bucket",
     "index_update", "suggest_num_buckets", "table_entries", "table_update",

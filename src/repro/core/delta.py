@@ -259,6 +259,28 @@ def delta_entries(delta: DeltaTable
     return k, w, k != EMPTY_KEY
 
 
+def weighted_entries(delta: DeltaTable
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Flat (keys, payloads, weights) Z-set view of the buffered ops.
+
+    The incremental-view-maintenance export (DESIGN.md §13): each live
+    delta entry is one weighted record — an insert/upsert carries weight
+    ``+1`` with its payload row, a tombstone weight ``-1`` (payload 0),
+    and an empty slot weight ``0``.  Because the delta holds the *net*
+    effect per key (one slot, last write wins), summing these weights
+    against a base key->row map reproduces exactly the overlay a probe
+    would see: ``+1`` overrides the mapping, ``-1`` removes it.
+    """
+    k = delta.keys.reshape(-1)
+    w = delta.words.reshape(-1)
+    live = k != EMPTY_KEY
+    is_tomb = w == TOMBSTONE
+    weight = jnp.where(live, jnp.where(is_tomb, jnp.int32(-1),
+                                       jnp.int32(1)), jnp.int32(0))
+    payload = jnp.where(live & ~is_tomb, w >> 1, jnp.int32(0))
+    return k, payload, weight
+
+
 # ---------------------------------------------------------------------------
 # Merge/compaction: fold delta entries into the main table bucket-locally
 # ---------------------------------------------------------------------------

@@ -125,6 +125,27 @@ def _check_batch_col(arg: str, values, *,
 
 
 @dataclasses.dataclass(frozen=True)
+class MutationEvent:
+    """One published mutation, as delivered to registered hooks.
+
+    ``kind`` is the WAL record kind (``ingest`` / ``append_rows`` /
+    ``append_fact_rows`` / ``compact`` / ``raw_update``), ``meta`` and
+    ``arrays`` the validated batch exactly as the WAL would log it, and
+    ``epoch`` / ``fact_epoch`` the engine counters at delivery — i.e.
+    *after* the mutation published, so a hook that finishes processing
+    the event is exactly as fresh as the engine.  Delivery happens under
+    the engine's mutation lock, at the same call sites as the WAL's
+    post-publish hook (``_wal_publish``), in mutation order.
+    """
+
+    kind: str
+    meta: dict
+    arrays: dict
+    epoch: int
+    fact_epoch: int
+
+
+@dataclasses.dataclass(frozen=True)
 class QuerySpec:
     name: str
     dim_filters: dict[str, Callable[[Table], jax.Array]]
@@ -647,7 +668,14 @@ def _mutates(fn):
     def wrapper(self, *a, **k):
         with self._mu:
             self._check_open()
-            return fn(self, *a, **k)
+            try:
+                return fn(self, *a, **k)
+            except BaseException:
+                # a torn mutation must not leave staged-but-unpublished
+                # events behind: a later publish would deliver a phantom
+                # batch the engine never applied
+                self._pending_events.clear()
+                raise
     return wrapper
 
 
@@ -682,6 +710,14 @@ class SSBEngine(_QueryRunner):
         # durability tier (DESIGN.md §10): attached by
         # DurabilityManager.create / SSBEngine.open; None = volatile engine
         self._durability = None
+        # mutation-hook fan-out (DESIGN.md §13): observers (the IVM tier)
+        # ride the same call sites as the WAL — ``_wal_log`` stages the
+        # validated batch, ``_wal_publish`` delivers it after the epoch
+        # publishes.  ``_view_suites`` is the registry ``snapshot()``
+        # consults to freeze maintained answers into the epoch image.
+        self._mutation_hooks: list[Callable] = []
+        self._pending_events: list[tuple] = []
+        self._view_suites: list = []
         # serving-tier contract (DESIGN.md §11): mutations serialize under
         # one reentrant lock (queries and snapshots stay lock-free), and a
         # closed engine refuses them with a clear error
@@ -928,6 +964,12 @@ class SSBEngine(_QueryRunner):
         d = self._durability
         if d is not None and not d.replaying:
             d.log_mutation(self, kind, meta, arrays)
+        if self._mutation_hooks:
+            # stage the validated batch for the mutation-hook fan-out; it
+            # is delivered by _wal_publish once the epoch publishes, so
+            # observers only ever see batches the engine actually applied
+            self._pending_events.append(
+                (kind, dict(meta or {}), dict(arrays or {})))
 
     def _wal_publish(self) -> None:
         """Post-publish hook: let the durability tier weigh a checkpoint
@@ -935,6 +977,61 @@ class SSBEngine(_QueryRunner):
         d = self._durability
         if d is not None and not d.replaying:
             d.on_publish(self)
+        self._notify_hooks()
+
+    def _notify_hooks(self) -> None:
+        """Deliver staged mutation batches to registered observers.
+
+        Runs under the engine lock at the ``_wal_publish`` call sites, in
+        mutation order.  Nested mutations (auto-compact inside ingest,
+        ingest inside append_rows) stage multiple events that all drain
+        at the outermost publish, stamped with the final epoch — which is
+        exactly the epoch their combined effect is visible at.
+        """
+        if not self._pending_events:
+            return
+        pending, self._pending_events = self._pending_events, []
+        for kind, meta, arrays in pending:
+            ev = MutationEvent(kind=kind, meta=meta, arrays=arrays,
+                               epoch=self._epoch,
+                               fact_epoch=self._fact_epoch)
+            for hook in list(self._mutation_hooks):
+                hook(ev)
+
+    # -- mutation-hook / view-suite registry (DESIGN.md §13) ---------------
+    def add_mutation_hook(self, fn: Callable) -> None:
+        """Subscribe ``fn(event: MutationEvent)`` to mutation batches.
+
+        Hooks run under the engine lock, post-publish, in mutation order
+        (the same call sites the WAL uses).  Keep them cheap and never
+        call back into engine mutation methods from a hook."""
+        with self._mu:
+            self._mutation_hooks.append(fn)
+
+    def remove_mutation_hook(self, fn: Callable) -> None:
+        """Unsubscribe a hook added with ``add_mutation_hook``."""
+        with self._mu:
+            self._mutation_hooks.remove(fn)
+            if not self._mutation_hooks:
+                self._pending_events.clear()
+
+    def register_view_suite(self, suite) -> None:
+        """Attach a maintained-view suite (``repro.ivm.MaintainedSuite``).
+
+        The suite's event hook subscribes to mutations, and
+        ``snapshot()`` freezes its answers into the epoch image whenever
+        the suite is fresh at the frozen epoch."""
+        with self._mu:
+            self._view_suites.append(suite)
+            self._mutation_hooks.append(suite._on_event)
+
+    def unregister_view_suite(self, suite) -> None:
+        """Detach a suite registered with ``register_view_suite``."""
+        with self._mu:
+            self._view_suites.remove(suite)
+            self._mutation_hooks.remove(suite._on_event)
+            if not self._mutation_hooks:
+                self._pending_events.clear()
 
     def persist(self, root: str, **kw) -> "object":
         """Start durability for this engine at a fresh ``root``.
@@ -1013,6 +1110,12 @@ class SSBEngine(_QueryRunner):
         self._index_gens[dim] = self._index_gens.get(dim, 0) + 1
         self._epoch += 1
         self.invalidate_probe_cache(dim)
+        if self._mutation_hooks:
+            # raw cell writes bypass the WAL (volatile-only), so stage +
+            # deliver here; observers can't incrementalize an arbitrary
+            # cell edit and are expected to invalidate on this kind
+            self._pending_events.append(("raw_update", {"dim": dim}, {}))
+            self._notify_hooks()
 
     @_mutates
     def entry_update(self, dim: str, bucket, slot, key, value_word) -> None:
@@ -1071,6 +1174,13 @@ class SSBEngine(_QueryRunner):
             raise ValueError(f"op: expected insert/upsert/delete, "
                              f"got {op!r}")
         keys = _check_batch_col("keys", keys)
+        if np.any(keys == int(_ht.EMPTY_KEY)):
+            # EMPTY_KEY is the delta's empty-slot sentinel: apply_batch
+            # would silently drop such ops, minting a hollow delta (no
+            # live entries) that still publishes an epoch and pays the
+            # overlay tax on every probe until compaction
+            raise ValueError("keys: EMPTY_KEY is reserved as the hash "
+                             "slot sentinel and cannot be ingested")
         if op == "delete":
             payloads = None
         else:
@@ -1146,6 +1256,13 @@ class SSBEngine(_QueryRunner):
                 n_new = cols_np[k].shape[0]
         if n_new == 0:
             return
+        if self.mode == "jspim" and \
+                np.any(cols_np[DIM_PK[dim]] == int(_ht.EMPTY_KEY)):
+            # reject before any state changes: the internal ingest would
+            # raise on this PK *after* the table grew, tearing the append
+            raise ValueError(f"rows[{DIM_PK[dim]!r}]: EMPTY_KEY is "
+                             "reserved as the hash slot sentinel and "
+                             "cannot be a dimension primary key")
         self._wal_log("append_rows", {"dim": dim}, cols_np)
         n0 = t.n_rows
         self.tables[dim] = t.append(
@@ -1273,7 +1390,8 @@ class SSBEngine(_QueryRunner):
             extend = (extend_cached_probe_donated if owned
                       else extend_cached_probe)
             self._probe_cache[dim] = extend(
-                self.indexes[dim], found, row, fk_tail, start,
+                effective_index(self.indexes[dim]), found, row, fk_tail,
+                start,
                 self._hot_codes.get(dim), impl=self.probe_impl,
                 plan=self.plans.get(dim))
             self._probe_epoch[dim] = self._fact_epoch
@@ -1416,6 +1534,12 @@ class SSBEngine(_QueryRunner):
         """
         idx = self.indexes[dim]
         if delta_is_empty(idx.delta):
+            if idx.delta is not None:
+                # hollow delta (allocated but zero live entries — e.g. a
+                # restored image): strip it so no future program boundary
+                # ever sees the overlay shape.  Bit-identical state, so no
+                # epoch publishes and no caches drop.
+                self.indexes[dim] = dataclasses.replace(idx, delta=None)
             return
         # logged like every other mutation batch (after the empty check:
         # an empty compact publishes nothing, so it must log nothing) so

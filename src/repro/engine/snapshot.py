@@ -89,6 +89,17 @@ class EpochSnapshot(_QueryRunner):
                                 for d in self._probe_cache}
         self._pin_index_gens = {d: engine._index_gens.get(d, 0)
                                 for d in self.indexes}
+        # maintained-view freeze (DESIGN.md §13): if a registered suite is
+        # fresh at this exact epoch, its answers ARE this image's answers
+        # — copy them out (host ints/arrays, O(views)) so the serving tier
+        # can answer canonical queries without touching the fact table.
+        # A stale or invalidated suite contributes nothing: queries fall
+        # back to this snapshot's compiled recompute paths.
+        self.maintained = None
+        for suite in getattr(engine, "_view_suites", ()):
+            if suite.fresh_at(engine.epoch):
+                self.maintained = suite.results()
+                break
         self._released = False
 
     # -- lifecycle ---------------------------------------------------------
@@ -117,6 +128,7 @@ class EpochSnapshot(_QueryRunner):
         self._hot_codes = {}
         self._probe_cache = {}
         self._full_programs = {}
+        self.maintained = None
         # rebind (not clear!) the shared one-launch program dicts
         self._suite_programs = {}
         self._mega_programs = {}

@@ -96,3 +96,74 @@ def generate_ssb(sf: float, seed: int = 0) -> dict[str, Table]:
         "part": Table.from_numpy(part),
         "date": Table.from_numpy(date),
     }
+
+
+# -- randomized mutation streams (IVM harness + benchmarks) -----------------
+def generate_fact_batch(tables, n: int,
+                        rng: np.random.Generator) -> dict[str, np.ndarray]:
+    """One realistic lineorder append batch against the current tables.
+
+    FK columns re-sample live fact rows (keeping the generated skew);
+    measures are drawn fresh with the generator's distributions so
+    batches are not pure duplicates of existing rows."""
+    fact = tables["lineorder"]
+    idx = rng.integers(0, fact.n_rows, n)
+    cols = {k: np.asarray(fact[k])[idx] for k in fact.names()}
+    q = rng.integers(1, 51, n, dtype=np.int32)
+    d = rng.integers(0, 11, n, dtype=np.int32)
+    ep = rng.integers(100, 100_000, n, dtype=np.int32)
+    cols["orderkey"] = np.arange(fact.n_rows, fact.n_rows + n,
+                                 dtype=np.int32)
+    cols["quantity"], cols["discount"], cols["extendedprice"] = q, d, ep
+    cols["revenue"] = (ep * (100 - d) // 100).astype(np.int32)
+    cols["supplycost"] = (ep * 6 // 10).astype(np.int32)
+    return cols
+
+
+def random_mutation(engine, rng: np.random.Generator, *,
+                    fact_batch: int = 64,
+                    kinds=("append_fact_rows", "ingest", "delete",
+                           "append_rows", "compact")) -> tuple[str, dict]:
+    """Draw one randomized mutation, apply it to ``engine``, and return
+    ``(kind, detail)`` so a differential harness can mirror it.
+
+    The op mix covers every kind the IVM tier incrementalizes: fact
+    appends, dimension upserts (including out-of-range re-points, which
+    exercise the clip-gather boundary), deletes, dimension growth, and
+    compaction.  Deterministic given ``rng``'s state and the engine's
+    current table sizes."""
+    from repro.engine.queries import DIM_PK
+
+    kind = kinds[int(rng.integers(0, len(kinds)))]
+    dim = ("customer", "supplier", "part",
+           "date")[int(rng.integers(0, 4))]
+    if kind == "append_fact_rows":
+        cols = generate_fact_batch(engine.tables, fact_batch, rng)
+        engine.append_fact_rows(cols)
+        return kind, {"rows": cols}
+    if kind in ("ingest", "delete"):
+        pk = np.asarray(engine.tables[dim][DIM_PK[dim]])
+        n = int(rng.integers(1, 9))
+        keys = pk[rng.integers(0, pk.shape[0], n)].astype(np.int32)
+        if kind == "delete":
+            engine.ingest(dim, keys, op="delete", auto_compact=False)
+            return "ingest", {"dim": dim, "op": "delete", "keys": keys}
+        # re-point: mostly valid rows, sometimes past the table end so
+        # the maintained clip state is exercised
+        hi = pk.shape[0] + (4 if rng.integers(0, 4) == 0 else 0)
+        pays = rng.integers(0, max(hi, 1), n, dtype=np.int32)
+        op = "upsert" if rng.integers(0, 2) else "insert"
+        engine.ingest(dim, keys, pays, op=op, auto_compact=False)
+        return "ingest", {"dim": dim, "op": op, "keys": keys,
+                          "payloads": pays}
+    if kind == "append_rows":
+        t = engine.tables[dim]
+        n = int(rng.integers(1, 4))
+        base = int(np.asarray(t[DIM_PK[dim]]).max()) + 1
+        src = rng.integers(0, t.n_rows, n)
+        rows = {k: np.asarray(t[k])[src] for k in t.names()}
+        rows[DIM_PK[dim]] = np.arange(base, base + n, dtype=np.int32)
+        engine.append_rows(dim, rows, auto_compact=False)
+        return kind, {"dim": dim, "rows": rows}
+    engine.compact(dim)
+    return "compact", {"dim": dim}

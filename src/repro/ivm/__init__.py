@@ -1,0 +1,13 @@
+"""Incremental view maintenance over Z-sets (DESIGN.md §13).
+
+Maintains all 13 SSB answers in O(Δ) per mutation batch by subscribing
+to the engine's mutation hooks: appends push weighted contributions
+through the linear filter→aggregate tail, and dimension mutations use
+the join chain rule (maintained probe rows + postings) to retract and
+re-add exactly the affected fact rows.
+"""
+from repro.ivm.maintain import MaintainedSuite
+from repro.ivm.views import QueryView
+from repro.ivm.zset import ZSetAggregate, wrap_i32
+
+__all__ = ["MaintainedSuite", "QueryView", "ZSetAggregate", "wrap_i32"]

@@ -1,0 +1,365 @@
+"""O(Δ) incremental view maintenance for the SSB suite (DESIGN.md §13).
+
+:class:`MaintainedSuite` subscribes to :class:`SSBEngine` mutation hooks
+(the same call sites the WAL uses) and keeps all 13 SSB answers current
+per mutation batch by touching only the rows the batch changed:
+
+- ``append_fact_rows`` — the new fact rows contribute weight ``+1``
+  through every view's filter→mask→segment-sum tail, which is linear.
+- ``ingest`` / ``delete`` / ``append_rows`` — only the *join* is
+  bilinear, so it carries chain-rule state: the maintained per-dimension
+  probe rows (``fact row → dimension row or -1``) and an inverted
+  postings map (``dimension key → fact rows``).  A key whose mapping
+  changes retracts the old contribution of exactly its posting rows
+  (weight ``-1`` under the old state) and re-adds them (``+1`` under the
+  new), leaving every other row's absorbed contribution untouched.
+- ``compact`` — a representation change, not a logical one: no-op.
+- ``raw_update`` (§3.2.3 cell writes) and any unknown mutation kind
+  invalidate the suite; ``rebuild()`` recovers, and the serving tier
+  falls back to recompute meanwhile (the invalidation contract).
+
+Every update is stamped with the epoch it reflects, so
+``EpochSnapshot`` can freeze maintained answers only when they are
+fresh at the frozen epoch.  Evaluation mirrors
+``serving.oracle.LogicalModel.eval_spec`` operation-for-operation
+(int32 per-element ops, int64 accumulation, clip-gathers against the
+*current* dimension length) — which is what makes maintained answers
+bit-identical to full re-execution, wraparound included.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (EMPTY_KEY, decode, table_entries, weighted_entries)
+from repro.engine.queries import DIM_PK, FACT_FK, SSB_QUERIES
+from repro.ivm.views import QueryView, _Cols
+
+
+class _Grow:
+    """Amortized-append host column: capacity-doubling numpy buffer."""
+
+    __slots__ = ("buf", "n")
+
+    def __init__(self, a: np.ndarray):
+        a = np.asarray(a)
+        self.n = int(a.shape[0])
+        cap = max(16, 1 << max(1, int(self.n)).bit_length())
+        self.buf = np.empty((cap,), a.dtype)
+        self.buf[:self.n] = a
+
+    def view(self) -> np.ndarray:
+        return self.buf[:self.n]
+
+    def append(self, a: np.ndarray) -> None:
+        a = np.asarray(a, self.buf.dtype)
+        m = int(a.shape[0])
+        if self.n + m > self.buf.shape[0]:
+            cap = 1 << int(self.n + m).bit_length()
+            nb = np.empty((cap,), self.buf.dtype)
+            nb[:self.n] = self.buf[:self.n]
+            self.buf = nb
+        self.buf[self.n:self.n + m] = a
+        self.n += m
+
+
+class MaintainedSuite:
+    """All 13 SSB results maintained in O(Δ) per mutation batch.
+
+    Build with :meth:`attach` (constructs the state and registers the
+    mutation hook atomically under the engine lock)::
+
+        suite = MaintainedSuite.attach(engine)
+        engine.append_fact_rows(rows)      # suite absorbs the batch
+        suite.results()["Q1.1"]            # == engine.run_all()["Q1.1"]
+
+    ``valid`` turns False on any mutation the suite cannot
+    incrementalize (raw §3.2.3 cell writes, internal inconsistency);
+    the suite then ignores further events until :meth:`rebuild`.
+    Consumers must check :meth:`fresh_at` before serving.
+    """
+
+    def __init__(self, engine, names=None):
+        if engine.mode != "jspim":
+            raise ValueError("MaintainedSuite requires jspim mode (the "
+                             "maintained join state mirrors the delta-"
+                             f"overlay index; mode={engine.mode!r})")
+        self._engine = engine
+        self.names = tuple(sorted(names if names is not None
+                                  else SSB_QUERIES))
+        for n in self.names:
+            if n not in SSB_QUERIES:
+                raise ValueError(f"unknown query {n!r}")
+        self.stats = {"events": 0, "maintain_s": 0.0, "rebuilds": 0,
+                      "invalidations": 0, "errors": 0, "rows_touched": 0}
+        with engine._mu:
+            self._init_state()
+
+    @classmethod
+    def attach(cls, engine, names=None) -> "MaintainedSuite":
+        """Build the suite AND subscribe it, atomically (no mutation can
+        land between the state build and the hook registration)."""
+        with engine._mu:
+            suite = cls(engine, names)
+            engine.register_view_suite(suite)
+        return suite
+
+    def detach(self) -> None:
+        self._engine.unregister_view_suite(self)
+
+    # -- state construction ------------------------------------------------
+    def _init_state(self) -> None:
+        eng = self._engine
+        fact = eng.tables["lineorder"]
+        n = fact.n_rows  # logical rows only: capacity padding never joins
+        self._fact = {k: _Grow(np.asarray(fact[k])[:n])
+                      for k in fact.names()}
+        self._n = n
+        self._dims, self._dim_n, self._km = {}, {}, {}
+        self._rows, self._post, self._over = {}, {}, {}
+        self._dmasks = {}
+        for dim in DIM_PK:
+            t = eng.tables[dim]
+            self._dims[dim] = {k: _Grow(np.asarray(t[k]))
+                               for k in t.names()}
+            self._dim_n[dim] = t.n_rows
+            self._km[dim] = self._build_key_map(dim)
+            self._index_fact(dim)
+        self._views = [QueryView(SSB_QUERIES[q]) for q in self.names]
+        self._apply(1, np.arange(n, dtype=np.int64))
+        self.valid = True
+        self.epoch = eng.epoch
+        self.fact_epoch = eng._fact_epoch
+
+    def _build_key_map(self, dim: str) -> dict:
+        """raw key -> dimension row, exactly as the engine's probe
+        resolves it: main hash table patched by the delta overlay."""
+        idx = self._engine.indexes[dim]
+        codes, payloads, valid = table_entries(idx.table)
+        keys = np.asarray(decode(idx.dictionary, codes))
+        pv, vv = np.asarray(payloads), np.asarray(valid)
+        km: dict = {}
+        for k, p, ok in zip(keys.tolist(), pv.tolist(), vv.tolist()):
+            if ok:
+                km[k] = p
+        if idx.delta is not None:
+            dk, dp, dw = (np.asarray(x)
+                          for x in weighted_entries(idx.delta))
+            for k, p, w in zip(dk.tolist(), dp.tolist(), dw.tolist()):
+                if w > 0:
+                    km[k] = p
+                elif w < 0:
+                    km.pop(k, None)
+        return km
+
+    def _index_fact(self, dim: str) -> None:
+        """Chain-rule state for one dimension: maintained probe rows and
+        the inverted postings map over the current fact mirror."""
+        km = self._km[dim]
+        nd = self._dim_n[dim]
+        fk = self._fact[FACT_FK[dim]].view()
+        post: dict = {}
+        over: set = set()
+        rr = np.empty(fk.shape[0], np.int64)
+        empty = int(EMPTY_KEY)
+        for i, kv in enumerate(fk.tolist()):
+            r = km.get(kv, -1)
+            rr[i] = r
+            if kv != empty:
+                post.setdefault(kv, []).append(i)
+            if r >= nd:
+                over.add(i)
+        self._rows[dim] = _Grow(rr)
+        self._post[dim] = post
+        self._over[dim] = over
+
+    def rebuild(self) -> None:
+        """Recover from invalidation: rebuild state from the live engine
+        (under the engine lock, so no mutation batch is half-absorbed)."""
+        with self._engine._mu:
+            self._init_state()
+        self.stats["rebuilds"] += 1
+
+    # -- serving surface ---------------------------------------------------
+    def fresh_at(self, epoch: int) -> bool:
+        """Is the maintained answer exactly the image at ``epoch``?"""
+        return self.valid and self.epoch == epoch
+
+    def results(self) -> dict:
+        """``{name: (total, groups)}`` copies, safe to hold across
+        further mutations."""
+        return {v.spec.name: v.result() for v in self._views}
+
+    def view(self, name: str) -> QueryView:
+        return self._views[self.names.index(name)]
+
+    # -- mutation-hook delivery --------------------------------------------
+    def _on_event(self, ev) -> None:
+        t0 = time.perf_counter()
+        try:
+            if self.valid:
+                self._dispatch(ev)
+        except Exception:
+            self.valid = False
+            self.stats["errors"] += 1
+        finally:
+            self.epoch = ev.epoch
+            self.fact_epoch = ev.fact_epoch
+            self.stats["events"] += 1
+            self.stats["maintain_s"] += time.perf_counter() - t0
+
+    def _dispatch(self, ev) -> None:
+        if ev.kind == "append_fact_rows":
+            self._on_append_fact(ev.arrays)
+        elif ev.kind == "ingest":
+            self._on_ingest(ev.meta["dim"], ev.meta["op"], ev.arrays)
+        elif ev.kind == "append_rows":
+            self._on_append_dim(ev.meta["dim"], ev.arrays)
+        elif ev.kind == "compact":
+            pass  # representation change only: the logical map is fixed
+        else:
+            # raw_update (§3.2.3 cell writes) or a future mutation kind:
+            # not incrementalizable — invalidate, serve by fallback
+            self.valid = False
+            self.stats["invalidations"] += 1
+
+    # -- event handlers ----------------------------------------------------
+    def _on_append_fact(self, cols: dict) -> None:
+        n_new = int(cols["orderkey"].shape[0])
+        n0 = self._n
+        for k, g in self._fact.items():
+            g.append(cols[k])
+        self._n = n0 + n_new
+        if self._n != self._engine.tables["lineorder"].n_rows:
+            self.valid = False  # mirror desync: never serve wrong answers
+            self.stats["invalidations"] += 1
+            return
+        empty = int(EMPTY_KEY)
+        for dim in DIM_PK:
+            km, post = self._km[dim], self._post[dim]
+            over, nd = self._over[dim], self._dim_n[dim]
+            fk = cols[FACT_FK[dim]]
+            rr = np.empty(n_new, np.int64)
+            for i, kv in enumerate(np.asarray(fk).tolist()):
+                r = km.get(kv, -1)
+                rr[i] = r
+                if kv != empty:
+                    post.setdefault(kv, []).append(n0 + i)
+                if r >= nd:
+                    over.add(n0 + i)
+            self._rows[dim].append(rr)
+        self.stats["rows_touched"] += n_new
+        self._apply(1, np.arange(n0, self._n, dtype=np.int64))
+
+    def _changed_mappings(self, dim: str, upd: dict) -> dict:
+        """Last-write-wins batch vs current map: the keys whose mapping
+        actually moves (an upsert to the same row is a no-op)."""
+        km = self._km[dim]
+        return {k: v for k, v in upd.items() if km.get(k) != v}
+
+    def _affected_rows(self, dim: str, changed,
+                       with_over: bool = False) -> np.ndarray:
+        post = self._post[dim]
+        aff: set = set(self._over[dim]) if with_over else set()
+        for k in changed:
+            aff.update(post.get(k, ()))
+        return np.fromiter(aff, np.int64, len(aff))
+
+    def _repoint(self, dim: str, changed: dict, aff: np.ndarray) -> None:
+        """Phase B of the join chain rule: commit the new key mappings and
+        refresh the maintained probe rows of the affected fact rows."""
+        km = self._km[dim]
+        for k, v in changed.items():
+            if v is None:
+                km.pop(k, None)
+            else:
+                km[k] = v
+        rview = self._rows[dim].view()
+        over, nd = self._over[dim], self._dim_n[dim]
+        fk = self._fact[FACT_FK[dim]].view()
+        for i in aff.tolist():
+            r = km.get(int(fk[i]), -1)
+            rview[i] = r
+            if r >= nd:
+                over.add(i)
+            else:
+                over.discard(i)
+
+    def _on_ingest(self, dim: str, op: str, arrays: dict) -> None:
+        keys = np.asarray(arrays["keys"]).tolist()
+        if op == "delete":
+            upd = dict.fromkeys(keys)  # key -> None = unmapped
+        else:
+            pays = np.asarray(arrays["payloads"]).tolist()
+            upd = dict(zip(keys, pays))  # dict(): last write wins
+        changed = self._changed_mappings(dim, upd)
+        if not changed:
+            return
+        aff = self._affected_rows(dim, changed)
+        self.stats["rows_touched"] += aff.shape[0]
+        self._apply(-1, aff)             # retract under the old mapping
+        self._repoint(dim, changed, aff)
+        self._apply(1, aff)              # re-add under the new mapping
+
+    def _on_append_dim(self, dim: str, cols: dict) -> None:
+        pk = np.asarray(cols[DIM_PK[dim]]).tolist()
+        n0 = self._dim_n[dim]
+        upd = {k: n0 + i for i, k in enumerate(pk)}
+        changed = self._changed_mappings(dim, upd)
+        # over-range rows re-evaluate too: their clip target (dimension
+        # length - 1) moves when the table grows, even if their key
+        # mapping is untouched
+        aff = self._affected_rows(dim, changed, with_over=True)
+        self.stats["rows_touched"] += aff.shape[0]
+        self._apply(-1, aff)             # old columns, old length, old map
+        for k, g in self._dims[dim].items():
+            g.append(cols[k])
+        self._dim_n[dim] = n0 + len(pk)
+        if self._dim_n[dim] != self._engine.tables[dim].n_rows:
+            self.valid = False
+            self.stats["invalidations"] += 1
+            return
+        for key in [k for k in self._dmasks if k[1] == dim]:
+            del self._dmasks[key]        # filter masks follow the length
+        self._repoint(dim, changed, aff)
+        self._apply(1, aff)              # new columns, new length, new map
+
+    # -- weighted evaluation (mirrors LogicalModel.eval_spec) --------------
+    def _dmask(self, spec, dim: str) -> np.ndarray:
+        key = (spec.name, dim)
+        dm = self._dmasks.get(key)
+        if dm is None:
+            dm = np.asarray(spec.dim_filters[dim](_Cols(
+                {k: g.view() for k, g in self._dims[dim].items()})))
+            self._dmasks[key] = dm
+        return dm
+
+    def _apply(self, sign: int, idx: np.ndarray) -> None:
+        """Push the weighted contribution of fact rows ``idx`` (under the
+        *current* chain-rule state) through every view's linear tail."""
+        if idx.shape[0] == 0:
+            return
+        fcols = {k: g.view()[idx] for k, g in self._fact.items()}
+        rows = {d: self._rows[d].view()[idx] for d in DIM_PK}
+        ft = _Cols(fcols)
+        for view in self._views:
+            spec = view.spec
+            mask = np.ones(idx.shape[0], bool)
+            for dim in spec.joined_dims():
+                r = rows[dim]
+                mask &= r >= 0
+                if dim in spec.dim_filters:
+                    dm = self._dmask(spec, dim)
+                    mask &= dm[np.clip(r, 0, dm.shape[0] - 1)]
+            if spec.fact_filter is not None:
+                mask &= np.asarray(spec.fact_filter(ft))
+            measure = np.asarray(spec.measure(ft)).astype(np.int64)
+            gk = None
+            if spec.group_by:
+                gk = np.zeros(idx.shape[0], np.int64)
+                for dim, col, card in spec.group_by:
+                    c = self._dims[dim][col].view()
+                    gk = gk * card + (
+                        c[np.clip(rows[dim], 0, c.shape[0] - 1)] % card)
+            view.apply(mask, measure, gk, sign)

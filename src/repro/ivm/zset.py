@@ -1,0 +1,60 @@
+"""Z-set group aggregates: weighted multiset state for maintained views.
+
+A Z-set is a collection of records with integer weights (DESIGN.md §13):
+an appended fact row is a record with weight ``+1``, a retracted
+contribution (a dimension delete or re-point withdrawing a join match)
+is the same record with weight ``-1``.  Because the SSB tail after the
+join is linear — filter, mask, segment-sum commute with addition of
+inputs (``Q(Σ ΔI) = Σ Q(ΔI)``) — a maintained aggregate only ever adds
+weighted contributions; it never re-reads rows it already absorbed.
+
+Arithmetic mirrors the engine's wraparound convention exactly
+(``serving.oracle.LogicalModel``): per-element measure ops happen in
+int32 (wrapping), accumulation in int64, and the served answer is the
+int64 sum cast to int32.  Int64 accumulator wrap (mod 2**64) preserves
+the served value (mod 2**32), so maintenance and recompute agree
+bit-for-bit at any stream length.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def wrap_i32(x: int) -> int:
+    """Reduce an unbounded python-int accumulator to int32 two's
+    complement — the value a ``.astype(np.int32)`` cast would serve."""
+    x &= 0xFFFFFFFF
+    return x - 0x100000000 if x >= 0x80000000 else x
+
+
+class ZSetAggregate:
+    """Per-group weighted sums for one GROUP BY shape.
+
+    ``sums[g]`` accumulates ``weight * measure`` per dense composite
+    group key, ``weights[g]`` the record multiplicity — the Z-set weight
+    of group ``g``.  A group whose weight returns to zero has all its
+    contributions retracted and serves exactly 0 again (delete-heavy
+    streams drive weights through zero and back; the int64 state makes
+    that retracing exact, and the int32 read is the wraparound the
+    engine's compiled programs produce).
+    """
+
+    __slots__ = ("sums", "weights")
+
+    def __init__(self, size: int):
+        self.sums = np.zeros(size, np.int64)
+        self.weights = np.zeros(size, np.int64)
+
+    def apply(self, gk: np.ndarray, measure: np.ndarray, w: int) -> None:
+        """Absorb records with group keys ``gk``, int64 ``measure``
+        values, and uniform weight ``w`` (±1)."""
+        np.add.at(self.sums, gk, np.int64(w) * measure)
+        np.add.at(self.weights, gk, np.int64(w))
+
+    def read(self) -> np.ndarray:
+        """The served group vector: int32 wraparound of the sums."""
+        return self.sums.astype(np.int32)
+
+    def weights_i32(self) -> np.ndarray:
+        """Group multiplicities as the int32 weights of the Z-set."""
+        return self.weights.astype(np.int32)

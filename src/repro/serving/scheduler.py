@@ -61,6 +61,8 @@ class ServeConfig:
     backoff_s: float = 0.005     # linear: attempt * backoff_s
     breaker_threshold: int = 3   # fused crashes in a row -> open
     breaker_cooldown: int = 8    # composed serves before half-open
+    serve_maintained: bool = True  # answer canonical queries from fresh
+    #                                maintained views (DESIGN.md §13)
     default_deadline_s: float | None = None
     clock: Callable[[], float] = time.monotonic
 
@@ -207,7 +209,7 @@ class QueryScheduler:
                       "timed_out": 0, "failed": 0, "retries": 0,
                       "batches": 0, "composed_batches": 0,
                       "refresh_failures": 0, "bg_compactions": 0,
-                      "bg_compact_conflicts": 0}
+                      "bg_compact_conflicts": 0, "maintained_served": 0}
 
     # -- admission ---------------------------------------------------------
     def submit(self, name: str, params=None, *,
@@ -240,8 +242,17 @@ class QueryScheduler:
                 drain = costmodel.batch_serve_seconds(
                     self.config.max_batch, n_rows) * (
                     1 + len(self._queue) / self.config.max_batch)
+                # clamp: never negative, and never shorter than the
+                # tightest admitted deadline slack — a client retrying
+                # on schedule must not land in a queue that is still
+                # obligated to serve everything admitted ahead of it
+                now = self.config.clock()
+                slacks = [it.deadline - now for it in self._queue
+                          if it.deadline is not None]
+                retry_after = max(0.0, drain,
+                                  max(0.0, min(slacks)) if slacks else 0.0)
                 ticket._resolve(Response(REJECTED, name, p,
-                                         retry_after_s=drain,
+                                         retry_after_s=retry_after,
                                          reason="queue full"))
                 self.stats["rejected"] += 1
                 return ticket
@@ -315,6 +326,49 @@ class QueryScheduler:
                            if id(it) not in taken]
             return take
 
+    # -- maintained-view fast path (DESIGN.md §13) --------------------------
+    def _serve_maintained(self, live: list[_Item]) -> list[_Item]:
+        """Answer requests the pinned snapshot's maintained views cover.
+
+        A maintained answer exists only for the canonical parameter
+        point (``PARAM_QUERIES[name].defaults`` — the constants the 13
+        maintained views are defined over) and only when the suite was
+        fresh at the snapshot's freeze epoch, in which case it is
+        bit-identical to what the recompute path would produce against
+        the same snapshot.  Everything else falls through to the batch
+        dispatch — the invalidation/fallback contract: an invalidated or
+        stale suite contributes nothing, it never degrades correctness.
+        """
+        if not self.config.serve_maintained:
+            return live
+        with self._mu:
+            pin = self._pin.acquire()
+        try:
+            m = pin.snap.maintained
+            if not m:
+                return live
+            epoch, lag = pin.snap.epoch, self._lag(pin.snap)
+            rest: list[_Item] = []
+            served = 0
+            for it in live:
+                if it.name in m and \
+                        it.params == PARAM_QUERIES[it.name].defaults:
+                    total, groups = m[it.name]
+                    it.ticket._resolve(Response(
+                        OK, it.name, it.params, total=int(total),
+                        groups=np.array(groups, copy=True), epoch=epoch,
+                        epoch_lag=lag, stale=lag > 0))
+                    served += 1
+                else:
+                    rest.append(it)
+            if served:
+                with self._mu:
+                    self.stats["maintained_served"] += served
+                    self.stats["completed"] += served
+            return rest
+        finally:
+            pin.release()
+
     # -- execution ---------------------------------------------------------
     def _execute(self, batch: list[_Item]) -> None:
         cfg = self.config
@@ -330,6 +384,9 @@ class QueryScheduler:
                 self.stats["timed_out"] += 1
             else:
                 live.append(it)
+        if not live:
+            return
+        live = self._serve_maintained(live)
         if not live:
             return
         with self._mu:

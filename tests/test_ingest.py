@@ -11,12 +11,12 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.core import (EMPTY_KEY, HASH_FIBONACCI, TOMBSTONE, build_table,
-                        delete_batch, delta_entries, delta_lookup,
-                        delta_stats, empty_delta, insert_batch,
-                        merge_entries, plan_compaction, probe,
+from repro.core import (EMPTY_KEY, HASH_FIBONACCI, TOMBSTONE, apply_batch,
+                        build_table, delete_batch, delta_entries,
+                        delta_lookup, delta_stats, empty_delta,
+                        insert_batch, merge_entries, plan_compaction, probe,
                         probe_with_delta, suggest_num_buckets,
-                        table_entries, upsert_batch)
+                        table_entries, upsert_batch, weighted_entries)
 from repro.core.dictionary import (DICT_PAD, NO_CODE, build_dictionary,
                                    decode, encode, extend_dictionary)
 from repro.engine import (SSBEngine, build_dim_index, compact_index,
@@ -626,3 +626,142 @@ def test_engine_auto_compaction_on_fill(tables):
     assert eng.ingest_info()["compactions"] >= 1
     pr = lookup(eng.indexes["date"], jnp.asarray(ks[::100]))
     assert np.asarray(pr.found).all()
+
+
+# ---------------------------------------------------------------------------
+# delta-semantics bugfix sweep (ISSUE 9 satellites)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_apply_batch_mixed_ops_last_write_wins_property(seed):
+    """Same-batch upsert-after-delete (and every other interleaving of
+    tombstone/payload words for a repeated key) must resolve to the last
+    occurrence — checked against a python-dict oracle that simply replays
+    the ops in arrival order."""
+    rng = np.random.default_rng(seed)
+    d = empty_delta(16, 8)  # 40 distinct keys in 128 slots: no overflow
+    oracle: dict[int, int] = {}
+    for _ in range(6):
+        n = int(rng.integers(1, 24))
+        keys = rng.integers(0, 40, n).astype(np.int32)
+        deletes = rng.random(n) < 0.5
+        pays = rng.integers(0, 1 << 20, n).astype(np.int32)
+        words = np.where(deletes, int(TOMBSTONE), pays << 1).astype(np.int32)
+        d = apply_batch(d, jnp.asarray(keys), jnp.asarray(words))
+        for k, w in zip(keys.tolist(), words.tolist()):
+            oracle[k] = w  # arrival order: later writes win
+    assert not bool(d.overflow)
+    probe_keys = np.arange(41, dtype=np.int32)
+    hit, word = delta_lookup(d, jnp.asarray(probe_keys))
+    hit, word = np.asarray(hit), np.asarray(word)
+    for k in probe_keys.tolist():
+        if k in oracle:
+            assert hit[k], k
+            assert word[k] == oracle[k], \
+                (k, "expected", oracle[k], "got", int(word[k]))
+        else:
+            assert not hit[k], k
+    # the weighted Z-set export agrees: +1 with payload for live entries,
+    # -1 for tombstones, nothing for untouched keys
+    wk, wp, ww = (np.asarray(x) for x in weighted_entries(d))
+    exported = {int(k): (int(w), int(p))
+                for k, p, w in zip(wk, wp, ww) if w != 0}
+    expect = {k: ((-1, 0) if w == int(TOMBSTONE) else (1, w >> 1))
+              for k, w in oracle.items()}
+    assert exported == expect
+
+
+def test_ingest_rejects_empty_key_sentinel(tables):
+    eng = SSBEngine(dict(tables), mode="jspim")
+    ep0 = eng.epoch
+    bad = np.asarray([3, int(EMPTY_KEY), 5], np.int32)
+    with pytest.raises(ValueError, match="EMPTY_KEY"):
+        eng.ingest("customer", bad, np.asarray([0, 1, 2], np.int32))
+    with pytest.raises(ValueError, match="EMPTY_KEY"):
+        eng.ingest("customer", bad[1:2], op="delete")
+    # rejected atomically: no epoch published, no hollow delta minted
+    assert eng.epoch == ep0
+    assert eng.indexes["customer"].delta is None
+
+
+def test_append_rows_rejects_empty_key_pk(tables):
+    eng = SSBEngine(dict(tables), mode="jspim")
+    t = eng.tables["customer"]
+    n0, ep0 = t.n_rows, eng.epoch
+    rows = {k: np.asarray(t[k])[:1].copy() for k in t.names()}
+    rows["custkey"] = np.asarray([int(EMPTY_KEY)], np.int32)
+    with pytest.raises(ValueError, match="EMPTY_KEY"):
+        eng.append_rows("customer", rows)
+    # rejected BEFORE any state change: the internal ingest would have
+    # raised after the table grew, tearing the append
+    assert eng.tables["customer"].n_rows == n0
+    assert eng.epoch == ep0
+
+
+def test_compact_strips_hollow_delta_without_publishing(tables):
+    eng = SSBEngine(dict(tables), mode="jspim")
+    eng.warm_cache()
+    ep0 = eng.epoch
+    inv0 = eng.cache_info()["invalidations"]
+    comp0 = eng.ingest_info()["compactions"]
+    # a hollow delta: allocated (e.g. restored from a durable image or
+    # survived a replayed fold) but with zero live entries
+    eng.indexes["customer"] = dataclasses.replace(
+        eng.indexes["customer"], delta=empty_delta(64, 8))
+    eng.compact("customer")
+    assert eng.indexes["customer"].delta is None  # stripped...
+    assert eng.epoch == ep0                       # ...without an epoch
+    assert eng.cache_info()["invalidations"] == inv0
+    assert eng.ingest_info()["compactions"] == comp0
+
+
+def test_hollow_delta_never_retraces_any_program_boundary(
+        tables, fact_batch, count_lowerings):
+    """The hollow-delta tax regression: an empty-but-present delta must be
+    stripped at every jit boundary — engine run paths, the fact-append
+    probe extension, snapshot serving, and the serving BatchRunner — so
+    nothing ever compiles an overlay-shaped program for zero ops."""
+    from repro.serving.batch import BatchRunner
+    from repro.serving.params import PARAM_QUERIES
+
+    rng = np.random.default_rng(9)
+    eng = SSBEngine(dict(tables), mode="jspim")
+    runner = BatchRunner(policy=eng.policy)
+    names = ("Q1.1", "Q3.2", "Q4.1")
+    b = 64
+
+    def append(i):
+        return eng.append_fact_rows(
+            fact_batch(eng.tables, rng, b, 9_000_000 + i * 256))
+
+    def drive():
+        eng.invalidate_probe_cache()  # probes re-run over the live index
+        eng.run_all()
+        append(next(counter))
+        eng.run_all()
+        with eng.snapshot() as snap:
+            snap.run_all()
+            for name in names:
+                p = PARAM_QUERIES[name].defaults
+                runner.run_batch(snap, name, [p, p], composed=False)
+                runner.run_batch(snap, name, [p], composed=True)
+
+    counter = iter(range(1000))
+    # warm until capacity headroom guarantees the measured appends stay
+    # inside one capacity quantum (fixed-shape contract from PR 3)
+    def headroom():
+        info = eng.fact_append_info()
+        return info["n_physical"] - info["n_valid"]
+
+    while headroom() < 10 * b + 256:
+        append(next(counter))
+    eng._maybe_replan_fact_skew(force=True)
+    drive()  # compile every boundary once, delta-free, at final capacity
+    drive()  # and once more: prove the drive itself is steady-state
+    for dim in eng.indexes:
+        eng.indexes[dim] = dataclasses.replace(
+            eng.indexes[dim], delta=empty_delta(64, 8))
+    with count_lowerings() as n:
+        drive()
+    assert n[0] == 0, f"hollow delta retraced {n[0]} program(s)"

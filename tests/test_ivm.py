@@ -1,0 +1,330 @@
+"""Incremental view maintenance (DESIGN.md §13): O(Δ) SSB suite.
+
+The correctness contract is **bit-identity to full re-execution**: after
+any interleaving of ``append_fact_rows`` / ``ingest`` (insert, upsert,
+delete) / ``append_rows`` / ``compact`` / ``snapshot``, every maintained
+``(total, groups)`` must equal ``engine.run_all()`` exactly — int32
+wraparound included.  The slow differential harness drives randomized
+interleavings; the fast tests pin the event plumbing, the Z-set weight
+algebra (through-zero retraction, wraparound totals), and the
+invalidation/fallback contract.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.engine import SSBEngine, generate_ssb
+from repro.engine.queries import SSB_QUERIES
+from repro.engine.ssb import generate_fact_batch, random_mutation
+from repro.ivm import MaintainedSuite, wrap_i32
+from repro.serving.oracle import LogicalModel
+
+SF = 0.002
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_programs():
+    """Free this module's compiled XLA executables when it finishes.
+
+    Every compiled program holds mmapped JIT code pages for the life of
+    the process, and the full tier-1 run already peaks near the kernel's
+    default ``vm.max_map_count`` (65530) — the differential engines this
+    module compiles (many scale factors × 13 queries × probe flavors)
+    are enough to push a later module's compile over the ceiling, which
+    LLVM answers with a segfault.  Later modules recompile what they
+    need; only wall time is shared, never executables.
+    """
+    yield
+    jax.clear_caches()
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return generate_ssb(SF, seed=11)
+
+
+def _engine(tables):
+    return SSBEngine(tables, mode="jspim")
+
+
+def _assert_suite_matches(engine, suite, tag=""):
+    __tracebackhide__ = True
+    assert suite.fresh_at(engine.epoch), \
+        f"{tag}: suite not fresh (valid={suite.valid}, " \
+        f"epoch={suite.epoch} vs {engine.epoch})"
+    full = engine.run_all()
+    got = suite.results()
+    for name, (t, g) in full.items():
+        mt, mg = got[name]
+        assert int(t) == mt, (tag, name, int(t), mt)
+        assert np.array_equal(np.asarray(g), mg), (tag, name)
+
+
+# ---------------------------------------------------------------------------
+# mutation-hook fan-out (engine plumbing the suite rides on)
+# ---------------------------------------------------------------------------
+
+
+def test_hooks_deliver_post_publish_in_order(tables):
+    eng = _engine(tables)
+    events = []
+    eng.add_mutation_hook(events.append)
+    ck = np.asarray(tables["customer"]["custkey"])
+    eng.ingest("customer", ck[:2].copy(), np.asarray([0, 1], np.int32),
+               auto_compact=False)
+    eng.append_fact_rows(generate_fact_batch(
+        eng.tables, 16, np.random.default_rng(0)))
+    eng.compact("customer")
+    kinds = [e.kind for e in events]
+    assert kinds == ["ingest", "append_fact_rows", "compact"]
+    # every event is stamped with the epoch its effect is visible at
+    assert [e.epoch for e in events] == [1, 2, 3]
+    eng.remove_mutation_hook(events.append)
+    eng.ingest("customer", ck[:1].copy(), np.asarray([0], np.int32),
+               auto_compact=False)
+    assert len(events) == 3
+
+
+def test_nested_mutations_drain_at_final_epoch(tables):
+    # append_rows drives an internal ingest (same event) and may trigger
+    # auto-compact (its own event); all staged events must deliver at the
+    # outermost publish with the FINAL epoch — the epoch their combined
+    # effect is visible at
+    eng = _engine(tables)
+    events = []
+    eng.add_mutation_hook(events.append)
+    t = eng.tables["customer"]
+    base = int(np.asarray(t["custkey"]).max()) + 1
+    rows = {k: np.asarray(t[k])[:2].copy() for k in t.names()}
+    rows["custkey"] = np.asarray([base, base + 1], np.int32)
+    eng.append_rows("customer", rows, auto_compact=False)
+    assert [e.kind for e in events] == ["append_rows"]
+    assert events[0].epoch == eng.epoch
+
+
+def test_failed_mutation_stages_no_phantom_event(tables):
+    eng = _engine(tables)
+    events = []
+    eng.add_mutation_hook(events.append)
+    with pytest.raises(ValueError):
+        eng.ingest("customer", np.asarray([1], np.int32),
+                   np.asarray([0, 1], np.int32))  # length mismatch
+    ck = np.asarray(tables["customer"]["custkey"])
+    eng.ingest("customer", ck[:1].copy(), np.asarray([0], np.int32),
+               auto_compact=False)
+    assert [e.kind for e in events] == ["ingest"]
+
+
+# ---------------------------------------------------------------------------
+# maintained suite: scripted differentials (fast)
+# ---------------------------------------------------------------------------
+
+
+def test_initial_build_matches_full_execution(tables):
+    eng = _engine(tables)
+    suite = MaintainedSuite.attach(eng)
+    _assert_suite_matches(eng, suite, "init")
+
+
+def test_requires_jspim_mode(tables):
+    eng = SSBEngine(tables, mode="baseline")
+    with pytest.raises(ValueError, match="jspim"):
+        MaintainedSuite(eng)
+
+
+def test_fact_append_and_dim_mutations_stay_bit_identical(tables):
+    eng = _engine(tables)
+    suite = MaintainedSuite.attach(eng)
+    rng = np.random.default_rng(3)
+    eng.append_fact_rows(generate_fact_batch(eng.tables, 64, rng))
+    _assert_suite_matches(eng, suite, "fact append")
+    ck = np.asarray(tables["customer"]["custkey"])
+    eng.ingest("customer", ck[:7].copy(), op="delete", auto_compact=False)
+    _assert_suite_matches(eng, suite, "delete")
+    eng.ingest("customer", ck[:7].copy(),
+               np.arange(7, dtype=np.int32), op="upsert",
+               auto_compact=False)
+    _assert_suite_matches(eng, suite, "re-insert")
+    # out-of-range re-point: the maintained clip state must follow
+    sk = np.asarray(tables["supplier"]["suppkey"])
+    eng.ingest("supplier", sk[:3].copy(),
+               np.asarray([10 ** 6, 1, 0], np.int32), op="upsert",
+               auto_compact=False)
+    _assert_suite_matches(eng, suite, "over-range repoint")
+    # dimension growth moves the clip target of over-range rows
+    t = eng.tables["supplier"]
+    rows = {k: np.asarray(t[k])[:2].copy() for k in t.names()}
+    rows["suppkey"] = (np.asarray([0, 1], np.int32)
+                       + int(np.asarray(t["suppkey"]).max()) + 1)
+    eng.append_rows("supplier", rows, auto_compact=False)
+    _assert_suite_matches(eng, suite, "dim growth")
+    eng.compact("customer")
+    eng.compact("supplier")
+    _assert_suite_matches(eng, suite, "compact")
+
+
+def test_raw_update_invalidates_and_rebuild_recovers(tables):
+    eng = _engine(tables)
+    suite = MaintainedSuite.attach(eng)
+    eng.index_update("part", int(np.asarray(tables["part"]["partkey"])[0]),
+                     3)
+    assert not suite.valid
+    assert not suite.fresh_at(eng.epoch)
+    assert suite.stats["invalidations"] == 1
+    # an invalidated suite ignores further events instead of diverging
+    eng.append_fact_rows(generate_fact_batch(
+        eng.tables, 16, np.random.default_rng(1)))
+    assert not suite.valid
+    suite.rebuild()
+    _assert_suite_matches(eng, suite, "rebuild")
+
+
+# ---------------------------------------------------------------------------
+# Z-set weight algebra (satellite: int32 weights, through-zero, wraparound)
+# ---------------------------------------------------------------------------
+
+
+def test_delete_heavy_stream_drives_weights_through_zero(tables):
+    eng = _engine(tables)
+    suite = MaintainedSuite.attach(eng)
+    view = suite.view("Q3.1")
+    assert view.count > 0 and np.any(view.zset.weights != 0)
+    before_w = view.zset.weights.copy()
+    before_s = view.zset.sums.copy()
+    # retract every customer: Q3.x / Q4.x lose every joined record
+    ck = np.asarray(tables["customer"]["custkey"])
+    for lo in range(0, ck.shape[0], 97):
+        eng.ingest("customer", ck[lo:lo + 97].copy(), op="delete",
+                   auto_compact=False)
+    _assert_suite_matches(eng, suite, "all customers deleted")
+    assert view.count == 0
+    assert np.all(view.zset.weights == 0)      # weights through zero...
+    assert np.all(view.zset.sums == 0)         # ...retraction is exact
+    assert np.all(view.zset.weights_i32() == 0)
+    assert suite.view("Q3.1").result()[0] == 0
+    # re-inserting the identical mappings restores the exact state
+    eng.ingest("customer", ck.copy(),
+               np.arange(ck.shape[0], dtype=np.int32), op="upsert",
+               auto_compact=False)
+    _assert_suite_matches(eng, suite, "all customers restored")
+    assert np.array_equal(view.zset.weights, before_w)
+    assert np.array_equal(view.zset.sums, before_s)
+
+
+def test_wraparound_totals_match_engine_and_oracle(tables):
+    # int32 per-element measures with int64 accumulation: drive totals
+    # far past int32 and require maintained == engine == numpy oracle
+    eng = _engine(tables)
+    model = LogicalModel(eng.tables)
+    suite = MaintainedSuite.attach(eng)
+    rng = np.random.default_rng(5)
+    for _ in range(3):
+        cols = generate_fact_batch(eng.tables, 256, rng)
+        cols["revenue"] = np.full(256, 2_000_000_000, np.int32)
+        cols["extendedprice"] = np.full(256, 2_000_000_000, np.int32)
+        cols["supplycost"] = np.full(256, -2_000_000_000, np.int32)
+        eng.append_fact_rows(cols)
+        model.append_fact(cols)
+    _assert_suite_matches(eng, suite, "wraparound")
+    got = suite.results()
+    wrapped = False
+    for name in SSB_QUERIES:
+        ot, og = model.query(name)
+        mt, mg = got[name]
+        assert ot == mt, name
+        assert np.array_equal(og, mg), name
+        view = suite.view(name)
+        wrapped |= view.total != wrap_i32(view.total)
+    assert wrapped  # the stream genuinely exceeded int32 somewhere
+
+
+def test_wrap_i32_is_twos_complement():
+    assert wrap_i32(0) == 0
+    assert wrap_i32(2 ** 31 - 1) == 2 ** 31 - 1
+    assert wrap_i32(2 ** 31) == -2 ** 31
+    assert wrap_i32(-2 ** 31 - 1) == 2 ** 31 - 1
+    assert wrap_i32(5 * 2 ** 32 + 7) == 7
+    assert wrap_i32(-7) == -7
+
+
+# ---------------------------------------------------------------------------
+# snapshot freeze (maintained answers stamped with their epoch)
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_freezes_fresh_maintained_answers(tables):
+    eng = _engine(tables)
+    suite = MaintainedSuite.attach(eng)
+    with eng.snapshot() as snap:
+        assert snap.maintained is not None
+        frozen = {n: (t, g.copy()) for n, (t, g) in snap.maintained.items()}
+        # the engine advances; the frozen answers must not move
+        eng.append_fact_rows(generate_fact_batch(
+            eng.tables, 32, np.random.default_rng(2)))
+        for name, (t, g) in snap.run_all().items():
+            ft, fg = frozen[name]
+            assert int(t) == ft and np.array_equal(np.asarray(g), fg), name
+        assert snap.maintained[name][0] == frozen[name][0]
+    # a fresh snapshot freezes the suite's *new* answers
+    with eng.snapshot() as snap2:
+        assert snap2.maintained is not None
+        for name, (t, g) in snap2.run_all().items():
+            mt, mg = snap2.maintained[name]
+            assert int(t) == mt and np.array_equal(np.asarray(g), mg), name
+    snap2.release()
+    assert snap2.maintained is None
+
+
+def test_snapshot_skips_stale_or_invalid_suite(tables):
+    eng = _engine(tables)
+    suite = MaintainedSuite.attach(eng)
+    eng.index_update("date", 0, 0)  # raw update invalidates the suite
+    assert not suite.valid
+    with eng.snapshot() as snap:
+        assert snap.maintained is None  # fallback contract: recompute
+    suite.rebuild()
+    with eng.snapshot() as snap:
+        assert snap.maintained is not None
+
+
+def test_detached_suite_contributes_nothing(tables):
+    eng = _engine(tables)
+    suite = MaintainedSuite.attach(eng)
+    suite.detach()
+    eng.append_fact_rows(generate_fact_batch(
+        eng.tables, 16, np.random.default_rng(4)))
+    assert suite.epoch < eng.epoch  # no longer receiving events
+    with eng.snapshot() as snap:
+        assert snap.maintained is None
+
+
+# ---------------------------------------------------------------------------
+# the differential harness: randomized mutation interleavings (slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [101, 202, 303])
+def test_ivm_differential_random_interleavings(seed):
+    """≥ 30 randomized {append_fact_rows, ingest, delete, append_rows,
+    compact, snapshot} interleavings, each proved bit-identical to full
+    re-execution (3 engines × 10 episodes; every episode is one
+    interleaving of 3–6 mutations plus a mid-episode snapshot check)."""
+    tables = generate_ssb(SF, seed=seed)
+    eng = SSBEngine(tables, mode="jspim")
+    suite = MaintainedSuite.attach(eng)
+    rng = np.random.default_rng(seed)
+    for episode in range(10):
+        for _ in range(int(rng.integers(3, 7))):
+            kind, _detail = random_mutation(eng, rng, fact_batch=48)
+        if rng.integers(0, 2):
+            with eng.snapshot() as snap:
+                assert snap.maintained is not None, episode
+                full = snap.run_all()
+                for name, (t, g) in full.items():
+                    mt, mg = snap.maintained[name]
+                    assert int(t) == mt, (episode, name)
+                    assert np.array_equal(np.asarray(g), mg), \
+                        (episode, name)
+        _assert_suite_matches(eng, suite, f"seed={seed} ep={episode}")
+    assert suite.stats["events"] > 0 and suite.stats["errors"] == 0

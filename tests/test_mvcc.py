@@ -471,7 +471,9 @@ def test_compact_empty_delta_strict_noop(tables, count_lowerings):
     assert eng.epoch == before_epoch
 
     # a manually planted all-empty delta (defensive: unreachable through
-    # the engine surface now) is just as inert under compact
+    # the engine surface now) is *stripped* by compact — a hollow delta's
+    # presence alone retraces probes and taxes every query, so compact
+    # drops it host-side without an epoch, a merge, or any invalidation
     eng.indexes["part"] = dataclasses.replace(
         eng.indexes["part"],
         delta=empty_delta(256, eng.indexes["part"].table.bucket_width))
@@ -479,13 +481,14 @@ def test_compact_empty_delta_strict_noop(tables, count_lowerings):
     eng.probe_dim("part")
     before_cache = eng.cache_info()
     before_plan = eng.plans["part"]
-    eng.compact("part")
-    assert eng.indexes["part"].delta is not None  # untouched, still empty
+    with count_lowerings() as count:
+        eng.compact("part")
+    assert count[0] == 0, "hollow-delta strip must not compile anything"
+    assert eng.indexes["part"].delta is None  # stripped, not merged
     assert eng.cache_info() == before_cache
     assert eng.plans["part"] is before_plan
+    assert eng.epoch == before_epoch
     assert eng.ingest_info()["compactions"] == before_compactions
-    eng.indexes["part"] = dataclasses.replace(eng.indexes["part"],
-                                              delta=None)
     # a real compaction still compacts
     eng.ingest("part", np.asarray([8_111_111], np.int32),
                np.asarray([eng.tables["part"].n_rows], np.int32),

@@ -428,3 +428,116 @@ def test_batch_serve_seconds_scales_with_batch_and_rows():
     assert costmodel.batch_serve_seconds(1, 80_000) > one
     # batching amortizes dispatch overhead: 8 in one batch beats 8 singles
     assert costmodel.batch_serve_seconds(8, 10_000) < 8 * one
+
+
+# ---------------------------------------------------------------------------
+# rejection backoff clamp + maintained-view serving (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def test_retry_after_clamped_to_tightest_admitted_slack(engine):
+    """A rejected client retrying on schedule must not land in a queue
+    still obligated to serve everything admitted ahead of it: the backoff
+    is never negative and never shorter than the tightest admitted
+    deadline slack."""
+    clock = _FakeClock()
+    sched = QueryScheduler(engine, ServeConfig(max_queue=2, clock=clock))
+    try:
+        sched.submit("Q1.1", deadline_s=7.0)
+        sched.submit("Q1.1", deadline_s=12.0)
+        t = sched.submit("Q1.1")
+        assert t.response.status == "rejected"
+        # cost-model drain at this scale is microseconds; the admitted
+        # 7s-slack item dominates
+        assert t.response.retry_after_s >= 7.0
+        # with no deadlines in the queue the clamp is just non-negative
+        sched.pump()
+        sched.submit("Q2.1")
+        sched.submit("Q2.1")
+        t2 = sched.submit("Q2.1")
+        assert t2.response.status == "rejected"
+        assert t2.response.retry_after_s >= 0.0
+    finally:
+        sched.close()
+
+
+def test_maintained_views_serve_canonical_queries(tables, model):
+    from repro.ivm import MaintainedSuite
+
+    eng = SSBEngine(dict(tables), mode="jspim")
+    suite = MaintainedSuite.attach(eng)
+    sched = QueryScheduler(eng, ServeConfig())
+    try:
+        t = sched.submit("Q3.1")               # canonical params
+        t2 = sched.submit("Q3.1", params=(2, 3, 1992, 1997))  # custom
+        sched.pump()
+        assert t.response.ok and t2.response.ok
+        _check(t.response, model)
+        _check(t2.response, model)
+        # the canonical request came from the frozen maintained views,
+        # the custom-parameter one fell through to the batch dispatch
+        info = sched.info()
+        assert info["maintained_served"] == 1
+        assert info["completed"] == 2
+        # the maintained answer is stamped with the snapshot's epoch
+        assert t.response.epoch == sched._pin.snap.epoch
+    finally:
+        sched.close()
+    assert suite.valid
+
+
+def test_maintained_serving_tracks_mutations(tables, model):
+    from repro.ivm import MaintainedSuite
+    from repro.serving.oracle import LogicalModel as _LM
+
+    eng = SSBEngine(dict(tables), mode="jspim")
+    MaintainedSuite.attach(eng)
+    mirror = _LM(eng.tables)
+    sched = QueryScheduler(eng, ServeConfig())
+    try:
+        doomed = np.asarray(tables["customer"]["custkey"][:9])
+        eng.ingest("customer", doomed.copy(), op="delete",
+                   auto_compact=False)
+        mirror.delete_keys("customer", doomed)
+        t = sched.submit("Q3.1")
+        sched.pump()                 # _execute refreshes to the new epoch
+        assert t.response.ok
+        _check(t.response, mirror)
+        assert sched.info()["maintained_served"] == 1
+        assert t.response.epoch_lag == 0 and not t.response.stale
+    finally:
+        sched.close()
+
+
+def test_maintained_serving_falls_back_when_invalid(tables, model):
+    from repro.ivm import MaintainedSuite
+
+    eng = SSBEngine(dict(tables), mode="jspim")
+    suite = MaintainedSuite.attach(eng)
+    eng.index_update("date", 0, 0)   # raw §3.2.3 write invalidates
+    assert not suite.valid
+    sched = QueryScheduler(eng, ServeConfig())
+    try:
+        t = sched.submit("Q1.1")
+        sched.pump()
+        assert t.response.ok         # recompute fallback, never wrong
+        _check(t.response, model)
+        assert sched.info()["maintained_served"] == 0
+    finally:
+        sched.close()
+
+
+def test_maintained_serving_can_be_disabled(tables, model):
+    from repro.ivm import MaintainedSuite
+
+    eng = SSBEngine(dict(tables), mode="jspim")
+    MaintainedSuite.attach(eng)
+    sched = QueryScheduler(eng, ServeConfig(serve_maintained=False))
+    try:
+        t = sched.submit("Q1.1")
+        sched.pump()
+        assert t.response.ok
+        _check(t.response, model)
+        assert sched.info()["maintained_served"] == 0
+    finally:
+        sched.close()
