@@ -64,6 +64,40 @@ class ExecutionPolicy:
         return dataclasses.replace(self, **kw)
 
 
+# The sharded (rank-parallel) engine's supported policy subspace: probes
+# compile through shard_map over the XLA gather path, and schedules that
+# need a host pull of the fact FK column (hot-key ranking) or a Pallas
+# grid cannot run against a mesh-sharded column.
+SHARDED_KERNELS = ("xla",)
+SHARDED_SCHEDULES = ("auto", "gathered", "deduped")
+
+
+def validate_sharded(policy: ExecutionPolicy) -> ExecutionPolicy:
+    """Reject policy knobs the sharded fact engine cannot honor.
+
+    Raising here (engine construction) beats failing inside a shard_map
+    trace with an opaque error: the sharded engine is jspim-only (the
+    baseline/pid join families materialize the fact column host-side),
+    XLA-kernel-only, and plans shard-local schedules without the
+    hot-key host ranking pass (``SHARDED_SCHEDULES``).
+    """
+    if policy.mode != "jspim":
+        raise ValueError(
+            f"sharded engine requires mode='jspim', got {policy.mode!r} "
+            "(baseline/pid joins materialize the fact column on one host)")
+    if policy.kernel not in SHARDED_KERNELS:
+        raise ValueError(
+            f"sharded engine requires kernel in {SHARDED_KERNELS}, got "
+            f"{policy.kernel!r} (Pallas grids do not run under shard_map "
+            "over a mesh-sharded fact column)")
+    if policy.schedule not in SHARDED_SCHEDULES:
+        raise ValueError(
+            f"sharded engine requires schedule in {SHARDED_SCHEDULES}, "
+            f"got {policy.schedule!r} (hot-key ranking would pull the "
+            "sharded FK column back to the host)")
+    return policy
+
+
 def resolve_policy(policy: ExecutionPolicy | None = None, *,
                    mode: str | None = None,
                    probe_impl: str | None = None,

@@ -1,16 +1,18 @@
 """Column-store DB engine: the faithful reproduction surface (SSB, joins)."""
 from repro.engine.table import Table
-from repro.engine.ssb import generate_ssb
+from repro.engine.ssb import generate_ssb, generate_ssb_dims, stream_ssb_fact
 from repro.engine.join import (BuildStats, DimIndex, build_dim_index,
                                compact_index, extend_cached_probe,
                                ingest_index, join_pairs, lookup,
                                lookup_filtered, sharded_lookup,
                                tail_lookup)
 from repro.engine.queries import SSB_QUERIES, SSBEngine
-from repro.engine.snapshot import EpochSnapshot
+from repro.engine.snapshot import EpochSnapshot, ShardedEpochSnapshot
+from repro.engine.shard import ShardedSSBEngine
 
-__all__ = ["Table", "generate_ssb", "BuildStats", "DimIndex",
+__all__ = ["Table", "generate_ssb", "generate_ssb_dims", "stream_ssb_fact",
+           "BuildStats", "DimIndex",
            "build_dim_index", "compact_index", "extend_cached_probe",
            "ingest_index", "join_pairs", "lookup", "lookup_filtered",
            "sharded_lookup", "tail_lookup", "SSB_QUERIES", "SSBEngine",
-           "EpochSnapshot"]
+           "EpochSnapshot", "ShardedEpochSnapshot", "ShardedSSBEngine"]

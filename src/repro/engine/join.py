@@ -438,6 +438,95 @@ extend_cached_probe_donated = jax.jit(
     donate_argnums=(1, 2))
 
 
+# Compiled shard-probe programs, keyed by (mesh, axis, plan, cold geometry).
+# The batch shape and the delta's pytree structure are jit keys of the
+# cached program itself, so repeated sharded probes at steady-state shapes
+# reuse one executable — the same program-cache discipline as probe_dim.
+_SHARDED_PROGRAMS: dict = {}
+
+
+def sharded_probe_program(mesh: jax.sharding.Mesh, axis: str,
+                          plan: SchedulePlan | None, cold_cap: int):
+    """The cached, jitted shard_map probe for one (mesh geometry, plan).
+
+    Callers pass ``plan=None`` for the plain gathered schedule so every
+    gathered probe on a mesh shares one program; ``deduped`` and
+    ``hot_cold`` plans key their own (``hot_cold`` also keys on the
+    per-shard cold capacity, which depends on the shard length).
+
+    The inner probe hardens the shard boundary against the ``EMPTY_KEY``
+    sentinel: shard-padding lanes (and the sharded engine's dead filler
+    rows) are masked out of ``found`` *after* the delta overlay, so a
+    live delta — even a poisoned dictionary or delta entry carrying the
+    sentinel — can never resurrect a padding row on any schedule.  The
+    payload is normalized to ``-1`` on misses, matching the engine's
+    cached-probe representation.
+    """
+    key = (mesh, axis, plan, cold_cap)
+    prog = _SHARDED_PROGRAMS.get(key)
+    if prog is not None:
+        return prog
+    from repro.launch import compat
+
+    schedule = plan.schedule if plan is not None else "gathered"
+
+    def probe_shard(idx: DimIndex, hot: jax.Array | None,
+                    keys: jax.Array) -> ProbeResult:
+        codes = encode(idx.dictionary, keys)
+        if schedule == "hot_cold":
+            ht = build_hot_table(idx.table, hot, plan.hot_slots)
+            pr = probe_hot_cold(idx.table, codes, ht,
+                                cold_capacity=cold_cap,
+                                dedup_cold=plan.dedup_cold)
+        elif schedule == "deduped":
+            pr = probe_deduped(idx.table, codes)
+        else:
+            pr = probe(idx.table, codes)
+        if idx.delta is not None:
+            # the delta travels replicated inside the index (P()) exactly
+            # like the hot table: every device overlays the same buffered
+            # ops on its shard's raw keys
+            pr = overlay_delta(pr, idx.delta, keys)
+        ok = pr.found & (keys != EMPTY_KEY)
+        return ProbeResult(ok, jnp.where(ok, pr.payload, -1),
+                           pr.is_dup & ok)
+
+    prog = jax.jit(compat.shard_map(
+        probe_shard, mesh=mesh, in_specs=(P(), P(), P(axis)),
+        out_specs=P(axis)))
+    _SHARDED_PROGRAMS[key] = prog
+    return prog
+
+
+def sharded_extend_program(mesh: jax.sharding.Mesh, axis: str, impl: str,
+                           plan: SchedulePlan | None, donate: bool):
+    """Cached shard_map flavor of the probe-cache tail extension.
+
+    Every shard probes its own pow2-padded tail window and splices it
+    into its slice of the cached ``(found, dim_row)`` arrays at the
+    (replicated, shard-local) ``start`` — the sharded engine's analogue
+    of ``extend_cached_probe``.  ``donate=True`` donates the cached
+    arrays so the steady-state splice updates shard buffers in place.
+    """
+    key = ("extend", mesh, axis, impl, plan, donate)
+    prog = _SHARDED_PROGRAMS.get(key)
+    if prog is not None:
+        return prog
+    from repro.launch import compat
+
+    def extend_shard(idx, hot, found, row, tail_keys, start):
+        return _extend_cached_probe_impl(idx, found, row, tail_keys,
+                                         start, hot, impl=impl, plan=plan)
+
+    sm = compat.shard_map(
+        extend_shard, mesh=mesh,
+        in_specs=(P(), P(), P(axis), P(axis), P(axis), P()),
+        out_specs=P(axis))
+    prog = jax.jit(sm, donate_argnums=(2, 3)) if donate else jax.jit(sm)
+    _SHARDED_PROGRAMS[key] = prog
+    return prog
+
+
 def sharded_lookup(index: DimIndex, fact_keys: jax.Array,
                    mesh: jax.sharding.Mesh, *, axis: str = "data",
                    plan: SchedulePlan | None = None,
@@ -448,7 +537,9 @@ def sharded_lookup(index: DimIndex, fact_keys: jax.Array,
     the full hash dataset (one dimension table — tiny next to the fact
     table) and probes its shard of the fact FK column, so the probe scales
     linearly in device count with zero cross-device traffic.  Fact rows are
-    padded to a multiple of the axis size with EMPTY_KEY (never matches).
+    padded to a multiple of the axis size with EMPTY_KEY (never matches:
+    the compiled shard program masks the sentinel out of ``found`` after
+    the delta overlay, so padding survives even adversarial deltas).
 
     With a ``hot_cold`` plan, ``hot_codes`` travels replicated (``P()``) —
     every device builds the same tiny hot table from its index replica,
@@ -456,38 +547,23 @@ def sharded_lookup(index: DimIndex, fact_keys: jax.Array,
     cold remainder of each shard stays shard-local.  The cold capacity is
     per-shard (a shard's cold count is at most the stream's), and the
     per-shard overflow fallback keeps any split correct.
-    """
-    from repro.launch import compat
 
+    Misses report ``payload == -1`` (the engine's cached-probe form).
+    """
     ndev = mesh.shape[axis]
     m = fact_keys.shape[0]
     pad = (-m) % ndev
-    fk = jnp.pad(fact_keys.astype(jnp.int32), (0, pad),
-                 constant_values=int(EMPTY_KEY))
+    fk = fact_keys.astype(jnp.int32)
+    if pad:
+        fk = jnp.pad(fk, (0, pad), constant_values=int(EMPTY_KEY))
     hot_cold = plan is not None and plan.schedule == "hot_cold"
     shard_m = (m + pad) // ndev
     cold_cap = min(shard_m, plan.cold_capacity) if hot_cold else 0
-
-    def probe_shard(idx: DimIndex, hot: jax.Array | None,
-                    keys: jax.Array) -> ProbeResult:
-        codes = encode(idx.dictionary, keys)
-        if hot_cold:
-            ht = build_hot_table(idx.table, hot, plan.hot_slots)
-            pr = probe_hot_cold(idx.table, codes, ht,
-                                cold_capacity=cold_cap,
-                                dedup_cold=plan.dedup_cold)
-        else:
-            pr = probe(idx.table, codes)
-        if idx.delta is not None:
-            # the delta travels replicated inside the index (P()) exactly
-            # like the hot table: every device overlays the same buffered
-            # ops on its shard's raw keys
-            pr = overlay_delta(pr, idx.delta, keys)
-        return pr
-
-    fn = compat.shard_map(probe_shard, mesh=mesh,
-                          in_specs=(P(), P(), P(axis)), out_specs=P(axis))
-    pr = fn(index, hot_codes if hot_cold else None, fk)
+    key_plan = plan if plan is not None and \
+        plan.schedule in ("deduped", "hot_cold") else None
+    prog = sharded_probe_program(mesh, axis, key_plan,
+                                 cold_cap if hot_cold else 0)
+    pr = prog(index, hot_codes if hot_cold else None, fk)
     return ProbeResult(pr.found[:m], pr.payload[:m], pr.is_dup[:m])
 
 

@@ -914,13 +914,19 @@ class SSBEngine(_QueryRunner):
         donation re-arms.  Release the snapshot (``release()`` / context
         manager / letting it be garbage collected) to retire its pins.
         """
-        from repro.engine.snapshot import EpochSnapshot
-
         with self._mu:  # freeze can't interleave with a mutation
-            snap = EpochSnapshot(self)
+            snap = self._make_snapshot()
             self._snapshots.add(snap)
             self._snapshots_taken += 1
         return snap
+
+    def _make_snapshot(self):
+        """Construct the frozen image (under ``_mu``).  Subclasses freeze
+        richer images — the sharded engine verifies the collective epoch
+        stamps and returns a mesh-aware snapshot here."""
+        from repro.engine.snapshot import EpochSnapshot
+
+        return EpochSnapshot(self)
 
     def _live_snapshots(self) -> list:
         return [s for s in self._snapshots if not s.released]

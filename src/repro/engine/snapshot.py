@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.engine.queries import DIM_PK, SSBEngine, _QueryRunner
+from repro.engine.queries import DIM_PK, FACT_FK, SSBEngine, _QueryRunner
 
 
 class EpochSnapshot(_QueryRunner):
@@ -188,3 +188,55 @@ class EpochSnapshot(_QueryRunner):
         return {"epoch": self.epoch, "fact_epoch": self.fact_epoch,
                 "cached_dims": sorted(self._probe_cache),
                 "released": self._released}
+
+
+def sharded_join(runner: _QueryRunner, dim: str, mesh, axis: str):
+    """The sharded engine's join primitive: cached shard_map probe over
+    the mesh-sharded fact FK column (index and delta replicated ``P()``).
+
+    Shared by :class:`~repro.engine.shard.ShardedSSBEngine` and
+    :class:`ShardedEpochSnapshot` so head and snapshot execute the same
+    compiled program — the program cache in ``engine/join.py`` is keyed
+    by (mesh, axis, plan), and the probe's delta structure and batch
+    shape key the inner jit, exactly the ``probe_dim`` discipline.
+    Misses carry ``dim_row == -1`` (the cached-probe representation).
+    """
+    from repro.engine.join import effective_index, sharded_probe_program
+
+    plan = runner.plans.get(dim)
+    key_plan = plan if plan is not None and \
+        plan.schedule == "deduped" else None
+    prog = sharded_probe_program(mesh, axis, key_plan, 0)
+    fk = runner.tables["lineorder"][FACT_FK[dim]]
+    pr = prog(effective_index(runner.indexes[dim]), None, fk)
+    return pr.found, pr.payload
+
+
+class ShardedEpochSnapshot(EpochSnapshot):
+    """An :class:`EpochSnapshot` of a mesh-sharded engine.
+
+    The freeze is the same zero-copy aliasing — sharded arrays are
+    immutable jax values like any other — plus the mesh geometry and the
+    engine's collective epoch stamps, captured *after* the engine
+    asserted they are uniform (``ShardedSSBEngine.snapshot``): no shard
+    of this image can serve a mixed epoch.  Lazy probes of dimensions
+    the engine had not cached run through the same cached shard_map
+    programs as the head, so they come back sharded ``P(axis)`` and
+    bit-identical to what the engine would have served at this epoch.
+    """
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        self.mesh = engine.mesh
+        self.axis = engine.axis
+        # the per-shard epoch stamps at freeze (device array, one per
+        # shard) — uniformity was asserted by the engine under its lock
+        self.epoch_stamps = engine._epoch_stamps
+
+    def _join(self, dim: str):
+        return sharded_join(self, dim, self.mesh, self.axis)
+
+    def cache_info(self) -> dict:
+        info = super().cache_info()
+        info["shards"] = int(self.mesh.shape[self.axis])
+        return info

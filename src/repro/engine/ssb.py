@@ -34,16 +34,27 @@ def _dates(rng: np.random.Generator) -> dict:
     }
 
 
-def generate_ssb(sf: float, seed: int = 0) -> dict[str, Table]:
-    """Generate the five SSB tables at scale factor ``sf``."""
-    rng = np.random.default_rng(seed)
-    n_lo = max(1000, int(6_000_000 * sf))
-    n_cust = max(30, int(30_000 * sf))
-    n_supp = max(20, int(2_000 * sf))
-    n_part = max(200, int(200_000 * sf))
+LINEORDER_COLUMNS = ("orderkey", "custkey", "partkey", "suppkey",
+                     "orderdate", "quantity", "discount", "extendedprice",
+                     "revenue", "supplycost")
 
+
+def ssb_sizes(sf: float) -> dict[str, int]:
+    """Row counts at scale factor ``sf`` (the paper's linear scaling)."""
+    return {"lineorder": max(1000, int(6_000_000 * sf)),
+            "customer": max(30, int(30_000 * sf)),
+            "supplier": max(20, int(2_000 * sf)),
+            "part": max(200, int(200_000 * sf)),
+            "date": 2556}
+
+
+def _gen_dims(rng: np.random.Generator, sf: float) -> dict[str, dict]:
+    """The four dimension tables, consuming ``rng`` in the fixed order
+    (date draws nothing, then customer/supplier geography, then part)."""
+    sizes = ssb_sizes(sf)
+    n_cust, n_supp, n_part = (sizes["customer"], sizes["supplier"],
+                              sizes["part"])
     date = _dates(rng)
-    n_date = date["datekey"].size
 
     def geo(n):
         region = rng.integers(0, REGIONS, n, dtype=np.int32)
@@ -72,30 +83,80 @@ def generate_ssb(sf: float, seed: int = 0) -> dict[str, Table]:
         "partkey": np.arange(n_part, dtype=np.int32),
         "mfgr": mfgr, "category": category, "brand": brand,
     }
+    return {"customer": customer, "supplier": supplier, "part": part,
+            "date": date}
 
-    quantity = rng.integers(1, 51, n_lo, dtype=np.int32)
-    discount = rng.integers(0, 11, n_lo, dtype=np.int32)
-    extendedprice = rng.integers(100, 100_000, n_lo, dtype=np.int32)
+
+def _gen_fact(rng: np.random.Generator, n: int, sf: float,
+              start_key: int = 0) -> dict[str, np.ndarray]:
+    """``n`` lineorder rows with the generator's distributions, drawing
+    from ``rng`` in the fixed column order (measure draws first, then FK
+    draws — the order ``generate_ssb`` has always used)."""
+    sizes = ssb_sizes(sf)
+    quantity = rng.integers(1, 51, n, dtype=np.int32)
+    discount = rng.integers(0, 11, n, dtype=np.int32)
+    extendedprice = rng.integers(100, 100_000, n, dtype=np.int32)
     supplycost = (extendedprice * 6 // 10).astype(np.int32)
-    lineorder = {
-        "orderkey": np.arange(n_lo, dtype=np.int32),
-        "custkey": rng.integers(0, n_cust, n_lo, dtype=np.int32),
-        "partkey": rng.integers(0, n_part, n_lo, dtype=np.int32),
-        "suppkey": rng.integers(0, n_supp, n_lo, dtype=np.int32),
-        "orderdate": rng.integers(0, n_date, n_lo, dtype=np.int32),
+    return {
+        "orderkey": np.arange(start_key, start_key + n, dtype=np.int32),
+        "custkey": rng.integers(0, sizes["customer"], n, dtype=np.int32),
+        "partkey": rng.integers(0, sizes["part"], n, dtype=np.int32),
+        "suppkey": rng.integers(0, sizes["supplier"], n, dtype=np.int32),
+        "orderdate": rng.integers(0, sizes["date"], n, dtype=np.int32),
         "quantity": quantity,
         "discount": discount,
         "extendedprice": extendedprice,
         "revenue": (extendedprice * (100 - discount) // 100).astype(np.int32),
         "supplycost": supplycost,
     }
+
+
+def generate_ssb(sf: float, seed: int = 0) -> dict[str, Table]:
+    """Generate the five SSB tables at scale factor ``sf``."""
+    rng = np.random.default_rng(seed)
+    dims = _gen_dims(rng, sf)
+    lineorder = _gen_fact(rng, ssb_sizes(sf)["lineorder"], sf)
     return {
         "lineorder": Table.from_numpy(lineorder),
-        "customer": Table.from_numpy(customer),
-        "supplier": Table.from_numpy(supplier),
-        "part": Table.from_numpy(part),
-        "date": Table.from_numpy(date),
+        "customer": Table.from_numpy(dims["customer"]),
+        "supplier": Table.from_numpy(dims["supplier"]),
+        "part": Table.from_numpy(dims["part"]),
+        "date": Table.from_numpy(dims["date"]),
     }
+
+
+def generate_ssb_dims(sf: float, seed: int = 0) -> dict[str, Table]:
+    """The four dimension tables only — byte-identical to the ones
+    ``generate_ssb(sf, seed)`` produces (same rng stream prefix), without
+    drawing the fact table.  The streamed-at-scale open path: dimensions
+    are small enough for any host; the fact rows arrive separately via
+    ``stream_ssb_fact``."""
+    dims = _gen_dims(np.random.default_rng(seed), sf)
+    return {name: Table.from_numpy(cols) for name, cols in dims.items()}
+
+
+def stream_ssb_fact(sf: float, seed: int = 0, *,
+                    chunk_rows: int = 1 << 20):
+    """Yield the SF-``sf`` lineorder table as append-ready chunks.
+
+    Never materializes the full fact table: each chunk draws from its own
+    rng (``default_rng((seed, chunk_index))``), so the stream is fully
+    determined by ``(sf, seed, chunk_rows)`` and any consumer — one device
+    or a mesh, resumed mid-stream or not — sees identical rows.  The
+    streamed fact data is a *different* sample than ``generate_ssb``'s
+    single-draw fact table (independent rng streams); scale benchmarks
+    and differential suites feed every engine the same stream, so the
+    cross-device-count oracle is unaffected.
+    """
+    n_lo = ssb_sizes(sf)["lineorder"]
+    start = 0
+    i = 0
+    while start < n_lo:
+        n = min(int(chunk_rows), n_lo - start)
+        rng = np.random.default_rng((seed, i))
+        yield _gen_fact(rng, n, sf, start_key=start)
+        start += n
+        i += 1
 
 
 # -- randomized mutation streams (IVM harness + benchmarks) -----------------

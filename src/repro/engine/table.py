@@ -42,8 +42,13 @@ def tail_bucket(n: int, min_bucket: int = TAIL_MIN_BUCKET) -> int:
     return max(min_bucket, 1 << max(0, int(n) - 1).bit_length())
 
 
-def _round_up(n: int, quantum: int) -> int:
+def round_up(n: int, quantum: int) -> int:
+    """Smallest multiple of ``quantum`` ≥ ``n`` (capacity quantization —
+    also the per-shard capacity arithmetic of the sharded fact engine)."""
     return -(-int(n) // int(quantum)) * int(quantum)
+
+
+_round_up = round_up  # internal alias (pre-sharding spelling)
 
 
 def _write_tail_impl(cols, tails, start: jax.Array) -> dict:

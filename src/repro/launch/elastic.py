@@ -9,6 +9,7 @@ this is the restart path after shrinking 512 → 256 chips (or growing).
 """
 from __future__ import annotations
 
+import numpy as np
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -26,10 +27,66 @@ def _axes_size(mesh, axes) -> int:
     return n
 
 
-def _sanitize(spec: P, shape, mesh) -> P:
+def _sanitize(spec: P, shape, mesh, *,
+              on_indivisible: str = "replicate") -> P:
+    """Clamp a sharding spec to what ``shape`` can carry on ``mesh``.
+
+    ``on_indivisible="replicate"`` (params): a dimension that is not a
+    multiple of its axis size drops the axis and replicates — model
+    weights must keep their exact logical shape, so padding is not an
+    option there.  ``on_indivisible="error"``: raise instead, for callers
+    (fact columns) where silently losing the shard axis is the bug —
+    they must pad to the shard multiple first (``shard_multiple`` /
+    ``shard_fact_columns``, the capacity-tail mechanism).
+    """
     entries = tuple(spec) + (None,) * (len(shape) - len(spec))
-    return P(*(None if a is None or d % _axes_size(mesh, a) else a
-               for d, a in zip(shape, entries)))
+    out = []
+    for d, a in zip(shape, entries):
+        if a is not None and d % _axes_size(mesh, a):
+            if on_indivisible == "error":
+                raise ValueError(
+                    f"dimension of {d} rows is not divisible by axis "
+                    f"{a!r} (size {_axes_size(mesh, a)}); pad to the "
+                    f"shard multiple instead of dropping the axis")
+            a = None
+        out.append(a)
+    return P(*out)
+
+
+def shard_multiple(n: int, ndev: int) -> int:
+    """Rows after padding ``n`` up to a multiple of ``ndev`` (≥ 0)."""
+    return -(-int(n) // int(ndev)) * int(ndev)
+
+
+def shard_fact_columns(cols, mesh: jax.sharding.Mesh, *, axis: str = "data",
+                       fills, cap_per_shard: int | None = None):
+    """Place 1-D fact columns on ``mesh`` sharded along ``axis``, padded —
+    never axis-dropped — when the length is not a shard multiple.
+
+    Each host column is split into ``ndev`` contiguous per-shard regions
+    of ``cap_per_shard`` rows (default: the minimal shard multiple) and
+    the per-shard tail is filled with ``fills[name]`` (``EMPTY_KEY`` for
+    FK columns, so padding can never join — the capacity-tail mechanism).
+    Returns ``(device_cols, cap_per_shard, valid_per_shard)`` where
+    ``valid_per_shard`` is the written rows per shard (live + dead fill).
+    """
+    ndev = int(mesh.shape[axis])
+    lens = {k: np.asarray(v).shape[0] for k, v in cols.items()}
+    assert len(set(lens.values())) <= 1, f"ragged columns: {lens}"
+    n = next(iter(lens.values())) if lens else 0
+    per = shard_multiple(n, ndev) // ndev
+    cap = per if cap_per_shard is None else int(cap_per_shard)
+    assert cap >= per, f"cap_per_shard {cap} below shard rows {per}"
+    sharding = NamedSharding(mesh, P(axis))
+    out = {}
+    for k, v in cols.items():
+        buf = np.full((ndev, cap), int(fills[k]), np.int32)
+        flat = np.full((ndev * per,), int(fills[k]), np.int32)
+        flat[:n] = np.asarray(v, np.int32)
+        if per:
+            buf[:, :per] = flat.reshape(ndev, per)
+        out[k] = jax.device_put(buf.reshape(-1), sharding)
+    return out, cap, per
 
 
 def reshard_params(params, new_mesh: jax.sharding.Mesh):

@@ -20,6 +20,20 @@ def make_host_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
     return compat.make_mesh(shape, axes)
 
 
+def make_data_mesh(ndev: int | None = None,
+                   axis: str = "data") -> jax.sharding.Mesh:
+    """1-D mesh over the first ``ndev`` local devices (default: all).
+
+    The shard axis the sharded fact engine and the scaling bench run on:
+    dimension indexes replicate, the fact table shards along ``axis``.
+    """
+    avail = len(jax.devices())
+    n = avail if ndev is None else int(ndev)
+    if not 1 <= n <= avail:
+        raise ValueError(f"ndev={n} outside available devices 1..{avail}")
+    return compat.make_mesh((n,), (axis,))
+
+
 def dp_size(mesh: jax.sharding.Mesh) -> int:
     n = 1
     for a in ("pod", "data"):

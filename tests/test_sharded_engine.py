@@ -1,0 +1,423 @@
+"""ShardedSSBEngine: differential oracle, epoch-consistent snapshots,
+zero-retrace steady state, EMPTY_KEY boundary, elastic reshard.
+
+Multi-device sections run in one subprocess with 8 forced host devices
+(the conftest contract keeps the main process at exactly 1 device); fast
+policy-validation units run in-process.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow  # subprocess + 8 simulated devices
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses as dc
+import json
+import sys
+sys.path.insert(0, {src!r})
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src import test_util as jtu
+
+from repro.core.hash_table import EMPTY_KEY
+from repro.engine import (SSBEngine, Table, build_dim_index, generate_ssb,
+                          generate_ssb_dims, ingest_index, lookup,
+                          sharded_lookup, stream_ssb_fact)
+from repro.engine.shard import ShardedSSBEngine
+from repro.engine.ssb import generate_fact_batch, random_mutation
+from repro.launch import elastic
+from repro.launch.mesh import make_data_mesh
+from jax.sharding import PartitionSpec as P
+
+out = {{}}
+assert len(jax.devices()) == 8
+
+
+def fingerprint(results):
+    return {{q: (int(t), np.asarray(g).tolist())
+             for q, (t, g) in results.items()}}
+
+
+def same(a, b):
+    return fingerprint(a) == fingerprint(b)
+
+
+# -- A. differential interleaving oracle (satellite 4) ----------------------
+# Randomized {{append_fact_rows, ingest(upsert/insert/delete), append_rows,
+# compact, snapshot}} stream: every mutation drives the single-device
+# mirror, replays into the sharded engine, and the two must stay
+# bit-identical at every checkpoint; sharded snapshots taken mid-stream
+# must keep answering at their frozen epoch.
+tables = generate_ssb(0.002, seed=3)
+mirror = SSBEngine(dict(tables))
+sh = ShardedSSBEngine(dict(tables))
+rng = np.random.default_rng(11)
+
+ok_steps = True
+snaps = []  # (snapshot, frozen fingerprint)
+for step in range(30):
+    kind, detail = random_mutation(mirror, rng, fact_batch=48)
+    if kind == "append_fact_rows":
+        sh.append_fact_rows(detail["rows"])
+    elif kind == "ingest":
+        if "payloads" in detail:
+            sh.ingest(detail["dim"], detail["keys"], detail["payloads"],
+                      op=detail["op"], auto_compact=False)
+        else:
+            sh.ingest(detail["dim"], detail["keys"], op="delete",
+                      auto_compact=False)
+    elif kind == "append_rows":
+        sh.append_rows(detail["dim"], detail["rows"], auto_compact=False)
+    else:
+        sh.compact(detail["dim"])
+    if step in (7, 19):
+        snaps.append((sh.snapshot(), fingerprint(sh.run_all())))
+    if step % 10 == 9:
+        ok_steps = ok_steps and same(mirror.run_all(), sh.run_all())
+final_mirror, final_sh = mirror.run_all(), sh.run_all()
+out["differential_interleaved"] = bool(ok_steps
+                                       and same(final_mirror, final_sh))
+out["differential_snapshots_stable"] = all(
+    fingerprint({{q: s.run(q) for q in final_sh}}) == frozen
+    for s, frozen in snaps)
+out["snapshot_stamps_uniform"] = all(
+    (np.asarray(s.epoch_stamps) == s.epoch).all() for s, _ in snaps)
+for s, _ in snaps:
+    s.release()
+
+# -- B. collective epoch publication ----------------------------------------
+# Every mutation kind must leave the mesh uniformly at the head epoch; a
+# torn publish (stamps behind the host epoch) must fail the freeze loudly
+# instead of serving a mixed-epoch image.
+out["stamps_track_epoch"] = bool(
+    (np.asarray(sh._epoch_stamps) == sh.epoch).all())
+sh._epoch_stamps = sh._epoch_stamps + jnp.int32(1)  # simulate torn publish
+try:
+    sh.snapshot()
+    out["mixed_epoch_detected"] = False
+except RuntimeError as e:
+    out["mixed_epoch_detected"] = "mixed-epoch" in str(e)
+sh._wal_publish()  # re-stamp collectively; freezing works again
+with sh.snapshot() as s2:
+    out["republish_heals"] = bool(
+        (np.asarray(s2.epoch_stamps) == sh.epoch).all())
+
+# -- C. zero-retrace steady state (satellite 1) ------------------------------
+# Repeated sharded probes and steady-state appends must compile nothing:
+# the shard programs are cached per (mesh, plan, geometry) and batch
+# shapes are bucket-quantized.
+mesh8 = sh.mesh
+warm = [generate_fact_batch(mirror.tables, 48, rng) for _ in range(5)]
+for b in warm[:2]:  # warm copy->donate write/extend flavors
+    mirror.append_fact_rows(b)
+    sh.append_fact_rows(b)
+sh.run_all()
+# capture AFTER the warm appends: appends donate the fact capacity
+# buffers, so pre-append column references are invalidated by design
+idx = sh.indexes["part"]
+fkp = sh.tables["lineorder"]["partkey"]
+sharded_lookup(idx, fkp, mesh8)  # warm the direct-probe program
+with jtu.count_jit_and_pmap_lowerings() as n:
+    for _ in range(3):
+        sharded_lookup(idx, fkp, mesh8)
+    for dim in ("part", "date"):
+        sh.invalidate_probe_cache(dim)
+        sh.probe_dim(dim)
+    for b in warm[2:]:
+        mirror.append_fact_rows(b)
+        sh.append_fact_rows(b)
+    sh.run_all()
+out["steady_state_lowerings"] = n[0]
+out["steady_state_identical"] = same(mirror.run_all(), sh.run_all())
+
+# -- D. EMPTY_KEY at the shard boundary (satellite 2) ------------------------
+# Padding lanes (and the sharded engine's dead filler rows) must stay
+# unfindable on every schedule, even against tombstone-heavy deltas and
+# adversarially poisoned dictionary/delta state.
+try:
+    bad = generate_fact_batch(mirror.tables, 8, rng)
+    bad["custkey"] = bad["custkey"].copy()
+    bad["custkey"][3] = int(EMPTY_KEY)
+    sh.append_fact_rows(bad)
+    out["append_rejects_sentinel"] = False
+except ValueError as e:
+    out["append_rejects_sentinel"] = "EMPTY_KEY" in str(e)
+
+part_keys = tables["part"]["partkey"]
+n_part = int(tables["part"].n_rows)
+fko = tables["lineorder"]["partkey"][:10_001]  # odd: 7 padded lanes at 8dev
+
+
+def pad_lanes_dead(index, plan=None):
+    pr = sharded_lookup(index, fko, mesh8, plan=plan)
+    full = sharded_probe_program_probe(index, plan)
+    return (not np.asarray(full.found)[10_001:].any()
+            and np.array_equal(np.asarray(pr.found),
+                               np.asarray(full.found)[:10_001]))
+
+
+def sharded_probe_program_probe(index, plan):
+    # raw program view: padded lanes included (sharded_lookup slices them)
+    from repro.engine.join import sharded_probe_program
+    key_plan = plan if plan is not None and plan.schedule == "deduped" \
+        else None
+    fk = jnp.pad(fko.astype(jnp.int32), (0, 7),
+                 constant_values=int(EMPTY_KEY))
+    return sharded_probe_program(mesh8, "data", key_plan, 0)(index, None, fk)
+
+
+from repro.core.planner import SchedulePlan
+
+idx0 = build_dim_index(part_keys)
+# tombstone-heavy live delta: delete 60% of keys, re-insert new ones
+idx_t = ingest_index(idx0, part_keys[: (n_part * 6) // 10], op="delete")
+idx_t = ingest_index(idx_t, jnp.arange(10**6, 10**6 + 64, dtype=jnp.int32),
+                     jnp.arange(64, dtype=jnp.int32), op="insert")
+out["padding_dead_tombstones"] = all(
+    pad_lanes_dead(idx_t, plan)
+    for plan in (None, SchedulePlan(schedule="deduped")))
+
+# poisoned dictionary: EMPTY_KEY smuggled in as a live sorted key — encode
+# then yields a real code, the main probe hits, and only the shard-boundary
+# guard keeps the padding lane dead
+d = idx0.dictionary
+pk = np.sort(np.concatenate([[np.int32(EMPTY_KEY)],
+                             np.asarray(d.keys)[: d.capacity - 1]]))
+idx_pd = dc.replace(idx0, dictionary=dc.replace(
+    d, keys=jnp.asarray(pk, jnp.int32), n=jnp.int32(int(d.n) + 1)))
+out["padding_dead_poisoned_dict"] = pad_lanes_dead(idx_pd)
+
+# poisoned delta: insert-words planted on free (EMPTY_KEY-keyed) slots —
+# a sentinel probe is the only thing that could ever match them
+delta = idx_t.delta
+idx_pdelta = dc.replace(idx_t, delta=dc.replace(
+    delta, words=jnp.where(delta.keys == int(EMPTY_KEY), jnp.int32(7 << 1),
+                           delta.words)))
+out["padding_dead_poisoned_delta"] = pad_lanes_dead(idx_pdelta)
+
+# the engine's own dead filler rows: an 8-indivisible batch leaves dead
+# rows interspersed at every shard boundary, and a live tombstone-heavy
+# delta must never surface one through any query path
+odd = generate_fact_batch(mirror.tables, 45, rng)  # 45 % 8 != 0
+mirror.append_fact_rows(odd)
+sh.append_fact_rows(odd)
+sh.ingest("part", part_keys[:50], op="delete", auto_compact=False)
+mirror.ingest("part", part_keys[:50], op="delete", auto_compact=False)
+found, _ = sh.probe_dim("part")
+dead = sh.shard_info()["dead_rows"]
+out["dead_rows_present"] = dead > 0
+phys = np.asarray(found).reshape(8, -1)
+valid = sh._shard_valid
+out["dead_rows_never_found"] = bool(not phys[:, valid:].any())
+out["post_tombstone_identical"] = same(mirror.run_all(), sh.run_all())
+
+# -- E. elastic reshard 1 -> 4 -> 2 (satellite 3) ----------------------------
+t2 = generate_ssb(0.002, seed=5)
+ref = SSBEngine(dict(t2))
+e1 = ShardedSSBEngine(dict(t2), mesh=make_data_mesh(1))
+r_ref = ref.run_all()
+out["reshard_1dev"] = same(r_ref, e1.run_all())
+e4 = e1.reshard(make_data_mesh(4))
+out["reshard_1to4"] = same(r_ref, e4.run_all())
+b = generate_fact_batch(t2, 100, np.random.default_rng(2))
+ref.append_fact_rows(b)
+e4.append_fact_rows(b)
+e2 = e4.reshard(make_data_mesh(2))
+out["reshard_4to2_after_append"] = bool(
+    same(ref.run_all(), e2.run_all())
+    and all(np.array_equal(e2.logical_fact_columns()[k],
+                           np.asarray(ref.tables["lineorder"].trimmed()[k]))
+            for k in e2.tables["lineorder"].names()))
+
+# indivisible lengths pad to the shard multiple — never drop the axis
+m4 = make_data_mesh(4)
+cols, cap, per = elastic.shard_fact_columns(
+    {{"k": np.arange(13, dtype=np.int32)}}, m4, fills={{"k": -1}})
+v = np.asarray(cols["k"]).reshape(4, cap)
+out["shard_pad_not_drop"] = bool(
+    per == 4 and not cols["k"].sharding.is_fully_replicated
+    and np.array_equal(v[:, :per].reshape(-1)[:13], np.arange(13))
+    and (v[:, :per].reshape(-1)[13:] == -1).all())
+try:
+    elastic._sanitize(P("data"), (13,), m4, on_indivisible="error")
+    out["sanitize_error_mode"] = False
+except ValueError as e:
+    out["sanitize_error_mode"] = "pad to the shard multiple" in str(e)
+out["sanitize_replicate_mode"] = elastic._sanitize(
+    P("data"), (13,), m4) == P(None)
+
+# -- F. streamed open ---------------------------------------------------------
+chunks = list(stream_ssb_fact(0.002, seed=7, chunk_rows=4096))
+host_fact = {{k: np.concatenate([c[k] for c in chunks])
+             for k in chunks[0]}}
+t3 = generate_ssb_dims(0.002, seed=7)
+t3["lineorder"] = Table.from_numpy(host_fact)
+ref3 = SSBEngine(t3)
+es = ShardedSSBEngine.from_streamed(0.002, seed=7, chunk_rows=4096)
+info = es.shard_info()
+out["streamed_identical"] = same(ref3.run_all(), es.run_all())
+out["streamed_live_rows"] = info["live_rows"] == host_fact["orderkey"].shape[0]
+out["streamed_windows"] = info["windows"] == len(chunks)
+
+print("RESULT::" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def result():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = SCRIPT.format(src=os.path.abspath(src))
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env.pop("PYTHONWARNINGS", None)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT::")][-1]
+    return json.loads(line[len("RESULT::"):])
+
+
+# -- A. differential oracle ---------------------------------------------------
+def test_differential_interleaved_mutations(result):
+    """Randomized append/ingest/delete/compact interleavings on an 8-device
+    mesh stay bit-identical to the single-device engine at every check."""
+    assert result["differential_interleaved"]
+
+
+def test_sharded_snapshots_stable_under_mutations(result):
+    """Mid-stream sharded snapshots keep answering at their frozen epoch
+    while the head engine mutates on."""
+    assert result["differential_snapshots_stable"]
+
+
+def test_snapshot_epoch_stamps_uniform(result):
+    """Every frozen image carries uniform per-shard epoch stamps equal to
+    its epoch — no shard ever serves a mixed-epoch image."""
+    assert result["snapshot_stamps_uniform"]
+
+
+# -- B. collective epoch publication ------------------------------------------
+def test_epoch_stamps_track_head_epoch(result):
+    assert result["stamps_track_epoch"]
+
+
+def test_mixed_epoch_freeze_fails_loudly(result):
+    """A torn publish (shard stamps behind the host epoch) makes
+    snapshot() raise instead of freezing a mixed-epoch image."""
+    assert result["mixed_epoch_detected"]
+
+
+def test_collective_republish_heals(result):
+    assert result["republish_heals"]
+
+
+# -- C. zero-retrace steady state (satellite 1 regression) --------------------
+def test_sharded_steady_state_compiles_nothing(result):
+    """Repeated sharded probes, cache re-probes, steady-state appends and
+    warm run_all on the mesh: zero jit lowerings (the old sharded_lookup
+    rebuilt its shard_map program every call)."""
+    assert result["steady_state_lowerings"] == 0
+
+
+def test_steady_state_still_identical(result):
+    assert result["steady_state_identical"]
+
+
+# -- D. EMPTY_KEY shard boundary (satellite 2 regression) ---------------------
+def test_sharded_append_rejects_sentinel_fk(result):
+    assert result["append_rejects_sentinel"]
+
+
+@pytest.mark.parametrize("key", ["padding_dead_tombstones",
+                                 "padding_dead_poisoned_dict",
+                                 "padding_dead_poisoned_delta"])
+def test_padding_rows_never_resurrect(result, key):
+    """Shard-padding lanes stay unfindable on every schedule against live
+    tombstone-heavy deltas and poisoned dictionary/delta state — the
+    boundary guard, not ingest-side rejection, is what holds."""
+    assert result[key]
+
+
+def test_dead_filler_rows_never_found(result):
+    assert result["dead_rows_present"]
+    assert result["dead_rows_never_found"]
+    assert result["post_tombstone_identical"]
+
+
+# -- E. elastic reshard (satellite 3 regression) ------------------------------
+def test_reshard_round_trip_bit_identical(result):
+    """1 -> 4 -> 2 device moves (with a mid-life append) round-trip
+    bit-identically, logical fact image included."""
+    assert result["reshard_1dev"]
+    assert result["reshard_1to4"]
+    assert result["reshard_4to2_after_append"]
+
+
+def test_fact_columns_pad_to_shard_multiple(result):
+    """Indivisible fact-column lengths pad to the shard multiple instead
+    of silently dropping the shard axis."""
+    assert result["shard_pad_not_drop"]
+
+
+def test_sanitize_error_mode_raises(result):
+    assert result["sanitize_error_mode"]
+    assert result["sanitize_replicate_mode"]
+
+
+# -- F. streamed open ---------------------------------------------------------
+def test_from_streamed_matches_materialized(result):
+    """Chunk-streamed SF open answers bit-identically to a single-device
+    engine over the same (host-materialized) stream."""
+    assert result["streamed_identical"]
+    assert result["streamed_live_rows"]
+    assert result["streamed_windows"]
+
+
+# -- fast in-process units (1 device) -----------------------------------------
+def test_validate_sharded_policy():
+    from repro.core.policy import ExecutionPolicy, validate_sharded
+
+    validate_sharded(ExecutionPolicy())
+    validate_sharded(ExecutionPolicy(schedule="deduped"))
+    with pytest.raises(ValueError, match="jspim"):
+        validate_sharded(ExecutionPolicy(mode="baseline"))
+    with pytest.raises(ValueError, match="kernel"):
+        validate_sharded(ExecutionPolicy(kernel="pallas"))
+    with pytest.raises(ValueError, match="schedule"):
+        validate_sharded(ExecutionPolicy(schedule="hot_cold"))
+
+
+def test_sharded_engine_rejects_unsupported_policy():
+    from repro.core.policy import ExecutionPolicy
+    from repro.engine.shard import ShardedSSBEngine
+
+    with pytest.raises(ValueError, match="jspim"):
+        ShardedSSBEngine({}, policy=ExecutionPolicy(mode="pid"))
+
+
+def test_shard_multiple():
+    from repro.launch.elastic import shard_multiple
+
+    assert shard_multiple(0, 8) == 0
+    assert shard_multiple(1, 8) == 8
+    assert shard_multiple(16, 8) == 16
+    assert shard_multiple(17, 4) == 20
+
+
+def test_make_data_mesh_bounds():
+    from repro.launch.mesh import make_data_mesh
+
+    m = make_data_mesh(1)
+    assert m.shape["data"] == 1
+    with pytest.raises(ValueError):
+        make_data_mesh(0)
+    with pytest.raises(ValueError):
+        make_data_mesh(10**6)
